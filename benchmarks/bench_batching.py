@@ -1,0 +1,74 @@
+"""Paper Fig. 8: user-driven batching — average per-request latency vs batch
+size, across functions of different durations (the five case-study scales),
+including a real reduced-LM inference function (the DLHub analogue)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FunctionService
+
+from .common import emit
+
+BATCH_SIZES = (1, 4, 16, 64)
+N_REQ = 64
+
+
+def _make_functions():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+
+    # the "ML inference" case study: a reduced qwen forward pass
+    cfg = get_reduced("qwen2-0.5b").with_(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fwd = jax.jit(lambda tokens: model.forward(params, {"tokens": tokens})[0])
+
+    def lm_inference(doc):
+        toks = jnp.asarray(doc["tokens"])
+        if toks.ndim == 1:
+            toks = toks[None]
+        return {"h": np.asarray(jax.block_until_ready(fwd(toks)))[..., :4]}
+
+    def sleep_1ms(doc):
+        time.sleep(0.001)
+        return doc
+
+    def sleep_30ms(doc):
+        time.sleep(0.03)
+        return doc
+
+    return {"sleep_1ms": sleep_1ms, "sleep_30ms": sleep_30ms,
+            "lm_inference": lm_inference}
+
+
+def run():
+    rows = []
+    fns = _make_functions()
+    for name, fn in fns.items():
+        svc = FunctionService()
+        svc.make_endpoint("batch", n_executors=1, workers_per_executor=2, prefetch=2)
+        meta = {"serialize_result": False, "pass_through": True} if name == "lm_inference" else {}
+        fid = svc.register_function(fn, name=name, **meta)
+        if name == "lm_inference":
+            payloads = [{"tokens": np.random.default_rng(i).integers(
+                0, 256, 16, dtype=np.int32)} for i in range(N_REQ)]
+        else:
+            payloads = [{"i": np.int64(i)} for i in range(N_REQ)]
+        for bs in BATCH_SIZES:
+            t0 = time.monotonic()
+            futs = []
+            for off in range(0, N_REQ, bs):
+                chunk = payloads[off: off + bs]
+                futs.extend(svc.batch_run(fid, chunk, user_batched=(bs > 1)))
+            for f in futs:
+                f.result(300)
+            per_req = (time.monotonic() - t0) / N_REQ
+            rows.append(emit(f"batching/{name}_bs{bs}", per_req * 1e6,
+                             "user-driven batching (Fig. 8)"))
+        svc.shutdown()
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Fig. 4 / Fig. 5 / Table 2: warm vs cold invocation latency and the
+t_c / t_w / t_m / t_e breakdown. The paper's hello-world function, verbatim."""
+from __future__ import annotations
+
+import time
+
+from repro.core import FunctionService
+
+from .common import emit
+
+
+def hello_world(event):
+    return event
+
+
+def run():
+    rows = []
+    svc = FunctionService()
+    svc.make_endpoint("lat", n_executors=1, workers_per_executor=2, prefetch=2)
+    fid = svc.register_function(hello_world, name="hello_world")
+
+    # cold: the first invocation ever (executable build + routing caches)
+    t0 = time.monotonic()
+    svc.run(fid, "hello-world").result(30)
+    cold = time.monotonic() - t0
+    rows.append(emit("latency/cold_roundtrip", cold * 1e6, "first invocation"))
+
+    # warm: steady state over 500 invocations
+    lats, breakdown = [], {"t_c": 0.0, "t_w": 0.0, "t_m": 0.0, "t_e": 0.0}
+    N = 500
+    for _ in range(N):
+        t0 = time.monotonic()
+        fut = svc.run(fid, "hello-world")
+        fut.result(10)
+        lats.append(time.monotonic() - t0)
+        for k, v in fut.latency_breakdown().items():
+            if k in breakdown:
+                breakdown[k] += v
+    warm = sum(lats) / N
+    rows.append(emit("latency/warm_roundtrip", warm * 1e6,
+                     f"n={N}; paper funcX warm=76ms (incl. 20.5ms WAN)"))
+    for k in ("t_c", "t_w", "t_m", "t_e"):
+        rows.append(emit(f"latency/breakdown_{k}", breakdown[k] / N * 1e6,
+                         "Fig.5 decomposition"))
+    rows.append(emit("latency/cold_warm_ratio", cold / warm * 100,
+                     "x100; paper funcX cold/warm = 38x"))
+
+    # jax-compiled function: cold = XLA compile, warm = executable-cache hit
+    import jax.numpy as jnp
+
+    def compiled_fn(doc):
+        return {"y": (doc["x"] @ doc["x"]).sum()}
+
+    import numpy as np
+    fid2 = svc.register_function(compiled_fn, name="compiled", jax_jit=True)
+    payload = {"x": np.ones((256, 256), np.float32)}
+    t0 = time.monotonic()
+    svc.run(fid2, payload).result(60)
+    cold2 = time.monotonic() - t0
+    t0 = time.monotonic()
+    for _ in range(50):
+        svc.run(fid2, payload).result(10)
+    warm2 = (time.monotonic() - t0) / 50
+    rows.append(emit("latency/jax_cold_compile", cold2 * 1e6, "trace+lower+XLA compile"))
+    rows.append(emit("latency/jax_warm", warm2 * 1e6, "warm executable cache"))
+    svc.shutdown()
+    return rows

@@ -1,0 +1,39 @@
+"""Deliverable (g): roofline terms per (arch x shape x mesh) from the
+multi-pod dry-run artifacts (benchmarks/results/dryrun.json). Emits one row
+per live cell: the step-time lower bound and which term dominates."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(RESULTS):
+        rows.append(emit("roofline/missing", 0.0,
+                         "run: python -m repro.launch.dryrun --all --both-meshes"))
+        return rows
+    with open(RESULTS) as f:
+        results = json.load(f)
+    for key in sorted(results):
+        rec = results[key]
+        if rec.get("status") != "ok":
+            continue
+        ov = rec.get("overrides") or {}
+        if ov:
+            continue  # baseline rows only; hillclimb rows live in EXPERIMENTS.md
+        a = rec["analysis"]
+        r = a["roofline"]
+        mesh = "512" if "multipod" in key else "256"
+        name = f"roofline/{rec['arch']}_{rec['shape']}_{mesh}ch"
+        bound = r["step_time_lower_bound_s"]
+        rows.append(emit(
+            name, bound * 1e6,
+            f"bneck={r['bottleneck']} frac={r.get('roofline_fraction', 0):.3f} "
+            f"fits={a['memory']['fits_hbm']} resident={a['memory']['resident_gib']}GiB",
+        ))
+    return rows

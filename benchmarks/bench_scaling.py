@@ -1,0 +1,58 @@
+"""Paper Fig. 6: strong scaling (fixed task count, growing workers) and weak
+scaling (fixed tasks/worker). One CPU core caps real parallelism for busy
+functions; no-op and sleep functions exercise the dispatch fabric exactly as
+the paper's no-op/sleep tasks do."""
+from __future__ import annotations
+
+import time
+
+from repro.core import FunctionService
+
+from .common import emit, noop, sleeper
+
+STRONG_TASKS = 512
+WEAK_TASKS_PER_WORKER = 16
+WORKER_COUNTS = (1, 2, 4, 8, 16, 32)
+
+
+def _endpoint(svc, workers):
+    # 4 workers per executor, like the paper's per-node worker pools
+    n_exec = max(1, workers // 4)
+    wpe = min(workers, 4)
+    return svc.make_endpoint(f"scale-{workers}", n_executors=n_exec,
+                             workers_per_executor=wpe, prefetch=4,
+                             policy="least_loaded")
+
+
+def run():
+    rows = []
+    for workers in WORKER_COUNTS:
+        svc = FunctionService()
+        _endpoint(svc, workers)
+        fid = svc.register_function(noop, name="noop")
+        futs = [svc.run(fid, {"i": i}) for i in range(STRONG_TASKS)]
+        t0 = time.monotonic()
+        # submission included in completion time, as in the paper
+        for f in futs:
+            f.result(120)
+        dt = time.monotonic() - t0
+        rows.append(emit(f"scaling/strong_noop_w{workers}",
+                         dt / STRONG_TASKS * 1e6,
+                         f"{STRONG_TASKS} tasks, {STRONG_TASKS/dt:.0f} req/s"))
+        svc.shutdown()
+
+    for workers in WORKER_COUNTS:
+        svc = FunctionService()
+        _endpoint(svc, workers)
+        fid = svc.register_function(sleeper, name="sleep10ms")
+        n = WEAK_TASKS_PER_WORKER * workers
+        t0 = time.monotonic()
+        futs = [svc.run(fid, {"i": i, "t": 0.01}) for i in range(n)]
+        for f in futs:
+            f.result(120)
+        dt = time.monotonic() - t0
+        # ideal weak scaling: flat completion time as workers grow
+        rows.append(emit(f"scaling/weak_sleep10ms_w{workers}",
+                         dt / n * 1e6, f"{n} tasks, completion {dt:.3f}s"))
+        svc.shutdown()
+    return rows

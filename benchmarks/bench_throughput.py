@@ -1,0 +1,49 @@
+"""Paper §6.2.3: maximum sustained throughput (requests/second) through the
+service + endpoint fabric (paper: 1694 and 1466 req/s on Theta and Cori)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import FunctionService
+
+from .common import emit, noop
+
+N = 3000
+
+
+def run():
+    rows = []
+    for policy in ("random", "least_loaded", "warm_affinity"):
+        svc = FunctionService()
+        svc.make_endpoint("tp", n_executors=2, workers_per_executor=4, prefetch=8,
+                          policy=policy)
+        fid = svc.register_function(noop, name="noop")
+        t0 = time.monotonic()
+        futs = [svc.run(fid, i) for i in range(N)]
+        for f in futs:
+            f.result(120)
+        dt = time.monotonic() - t0
+        rows.append(emit(f"throughput/{policy}", dt / N * 1e6,
+                         f"{N/dt:.0f} req/s (paper: 1694 Theta / 1466 Cori)"))
+        svc.shutdown()
+
+    # user-driven batching multiplies effective throughput (paper Fig. 8)
+    import numpy as np
+
+    svc = FunctionService()
+    svc.make_endpoint("tpb", n_executors=2, workers_per_executor=4, prefetch=8)
+
+    def vector_noop(doc):
+        return doc
+
+    fid = svc.register_function(vector_noop, name="vec_noop")
+    payloads = [{"x": np.float32(i)} for i in range(N)]
+    t0 = time.monotonic()
+    futs = svc.batch_run(fid, payloads, user_batched=True)
+    for f in futs:
+        f.result(120)
+    dt = time.monotonic() - t0
+    rows.append(emit("throughput/user_batched", dt / N * 1e6,
+                     f"{N/dt:.0f} req/s effective"))
+    svc.shutdown()
+    return rows

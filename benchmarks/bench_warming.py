@@ -1,0 +1,61 @@
+"""Paper Table 4: cold 'container' instantiation vs warm reuse. On the TPU
+adaptation a container is a compiled executable: cold = trace+lower+XLA
+compile (+ weight residency), warm = executable-cache hit. Swept over
+function sizes the way the paper sweeps container technologies."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FunctionService
+
+from .common import emit
+
+
+def _funcs():
+    import jax
+    import jax.numpy as jnp
+
+    def small(doc):  # elementwise
+        return {"y": jnp.tanh(doc["x"]) * 2}
+
+    def medium(doc):  # one matmul
+        return {"y": (doc["x"] @ doc["x"]).sum()}
+
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+
+    cfg = get_reduced("qwen1.5-0.5b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def lm_step(doc):  # a whole reduced-LM loss
+        return {"loss": model.loss(params, {"tokens": jnp.asarray(doc["tokens"])})[0]}
+
+    return {
+        "small_elementwise": (small, {"x": np.ones((64, 64), np.float32)}),
+        "medium_matmul": (medium, {"x": np.ones((512, 512), np.float32)}),
+        "reduced_lm_loss": (lm_step, {"tokens": np.ones((2, 32), np.int32)}),
+    }
+
+
+def run():
+    rows = []
+    for name, (fn, payload) in _funcs().items():
+        svc = FunctionService()
+        svc.make_endpoint("warm", n_executors=1, workers_per_executor=1)
+        fid = svc.register_function(fn, name=name, jax_jit=True)
+        t0 = time.monotonic()
+        svc.run(fid, payload).result(120)
+        cold = time.monotonic() - t0
+        t0 = time.monotonic()
+        for _ in range(20):
+            svc.run(fid, payload).result(30)
+        warm = (time.monotonic() - t0) / 20
+        rows.append(emit(f"warming/{name}_cold", cold * 1e6,
+                         "XLA compile = container boot (Table 4)"))
+        rows.append(emit(f"warming/{name}_warm", warm * 1e6,
+                         f"cold/warm = {cold/warm:.0f}x"))
+        svc.shutdown()
+    return rows

@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: CSV emission in the required format."""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> Dict[str, Any]:
+    row = {"name": name, "us_per_call": round(us_per_call, 2), "derived": derived}
+    print(f"{row['name']},{row['us_per_call']},{row['derived']}", flush=True)
+    return row
+
+
+def noop(doc):
+    return doc
+
+
+def sleeper(doc):
+    time.sleep(doc.get("t", 0.0))
+    return {"i": doc.get("i", 0)}
+
+
+def percentile(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")

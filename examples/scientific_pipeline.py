@@ -1,0 +1,88 @@
+"""Scientific case study (paper §7): metadata extraction + ML inference as an
+automation flow — the Skluma/DLHub pattern on funcJAX.
+
+    PYTHONPATH=src python examples/scientific_pipeline.py
+
+A crawler "discovers" files; each file triggers a flow (Globus Automate
+ActionProvider analogue): extract metadata -> run a reduced-LM featurizer ->
+aggregate. Executor failure mid-run demonstrates the watchdog re-execution.
+"""
+import time
+
+import numpy as np
+
+from repro.core import ActionStep, Flow, FunctionService
+
+
+def main() -> None:
+    service = FunctionService()
+    ep = service.make_endpoint("science", n_executors=2, workers_per_executor=2,
+                               prefetch=4, heartbeat_interval_s=0.1, elastic=True)
+
+    # -- step 1: metadata extraction (Skluma-style) -------------------------
+    def extract_metadata(doc):
+        data = np.asarray(doc["data"])
+        return {
+            "file": doc["file"],
+            "rows": int(data.shape[0]),
+            "mean": float(data.mean()),
+            "histogram": np.histogram(data, bins=8)[0],
+        }
+
+    # -- step 2: ML inference (DLHub-style; reduced LM as the model) --------
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+
+    cfg = get_reduced("qwen2-0.5b").with_(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fwd = jax.jit(lambda toks: model.forward(params, {"tokens": toks})[0])
+
+    def ml_featurize(doc):
+        # quantize the histogram into token ids, embed with the LM
+        tokens = (np.asarray(doc["histogram"]) % cfg.vocab).astype(np.int32)[None]
+        h = np.asarray(jax.block_until_ready(fwd(jnp.asarray(tokens))))
+        return dict(doc, embedding_norm=float(np.linalg.norm(h)))
+
+    # -- step 3: aggregate ----------------------------------------------------
+    def classify(doc):
+        label = "interesting" if doc["embedding_norm"] > 50 else "routine"
+        return dict(doc, label=label)
+
+    f_extract = service.register_function(extract_metadata, name="extract")
+    f_ml = service.register_function(ml_featurize, name="ml_featurize")
+    f_cls = service.register_function(classify, name="classify")
+
+    flow = Flow([
+        ActionStep(f_extract, name="extract"),
+        ActionStep(f_ml, name="featurize"),
+        ActionStep(f_cls, name="classify"),
+    ], name="skluma-dlhub")
+
+    rng = np.random.default_rng(0)
+    files = [{"file": f"scan_{i:04d}.h5", "data": rng.standard_normal((64, 16))}
+             for i in range(12)]
+
+    t0 = time.monotonic()
+    runs = [flow.start(service, f) for f in files]
+    # inject a node failure mid-flight: the watchdog re-executes lost steps
+    time.sleep(0.1)
+    ep.kill_executor(0)
+    results = [Flow.wait(r, timeout=120) for r in runs]
+    dt = time.monotonic() - t0
+
+    labels = [r["label"] for r in results]
+    print(f"processed {len(results)} files in {dt:.2f}s "
+          f"(through an executor failure; requeued={ep.requeued})")
+    print("labels:", {l: labels.count(l) for l in set(labels)})
+    per_step = [h["latency"]["t_e"] * 1e3 for r in runs for h in r.history]
+    print(f"mean step execution time: {np.mean(per_step):.2f}ms over "
+          f"{len(per_step)} flow steps")
+    service.shutdown()
+
+
+if __name__ == "__main__":
+    main()

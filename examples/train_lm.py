@@ -1,0 +1,53 @@
+"""End-to-end training driver: train a ~100M-param LM through the FaaS
+endpoint with prefetching + checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py                   # quick demo
+    PYTHONPATH=src python examples/train_lm.py --full-100m --steps 300
+
+The quick demo uses the reduced config; --full-100m builds a ~100M dense
+model (the assignment's "train ~100M for a few hundred steps" driver —
+expect ~hours on this 1-core CPU container; it is sized for a pod).
+"""
+import argparse
+
+from repro.configs import get_reduced
+from repro.core import FunctionService
+from repro.models.model import Model
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/funcjax_train_ckpt")
+    ap.add_argument("--full-100m", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_reduced("qwen1.5-0.5b").with_(dtype="float32")
+    if args.full_100m:
+        cfg = cfg.with_(n_layers=8, d_model=512, n_heads=8, n_kv_heads=8,
+                        d_ff=2048, vocab=32768, name="dense-100m")
+    model = Model(cfg)
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+
+    service = FunctionService()
+    service.make_endpoint("trainer", n_executors=1, workers_per_executor=1)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps)
+    tcfg = TrainConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_every=max(args.steps // 4, 1), ckpt_dir=args.ckpt,
+                       prefetch_depth=2, log_every=max(args.steps // 8, 1))
+    trainer = Trainer(model, ocfg, tcfg, service=service)
+    if trainer.step:
+        print(f"resumed from checkpoint at step {trainer.step}")
+    history = trainer.run()
+    print(f"loss: {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f} "
+          f"({len(history)} steps run; checkpoints in {args.ckpt})")
+    service.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""funcJAX: Serverless Supercomputing (funcX, 2019) as a multi-pod JAX framework.
+
+Subpackages:
+    core        the paper's FaaS platform (service, endpoints, optimizations)
+    models      10 assigned LM architectures (dense/moe/ssm/hybrid/encdec/vlm)
+    kernels     Pallas TPU kernels + pure-jnp oracles
+    sharding    logical-axis partitioner (FSDP x TP x EP + pod axis)
+    training    AdamW, step builders, FaaS-driven train loop
+    serving     KV caches + continuous-batching engine
+    data        prefetching pipelines
+    checkpoint  async sharded checkpoint/restart
+    configs     architecture configs + input shapes
+    launch      mesh, multi-pod dry-run, train/serve drivers, pilot jobs
+"""
+
+__version__ = "1.0.0"

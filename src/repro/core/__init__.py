@@ -1,0 +1,34 @@
+"""funcJAX core: the paper's FaaS platform (funcX) as a JAX-native runtime.
+
+Public API:
+    FunctionService, Endpoint, TaskFuture, TokenAuthority, Flow
+"""
+from .auth import (  # noqa: F401
+    SCOPE_ADMIN,
+    SCOPE_INVOKE,
+    SCOPE_REGISTER_ENDPOINT,
+    SCOPE_REGISTER_FUNCTION,
+    AuthError,
+    Token,
+    TokenAuthority,
+)
+from .automation import ActionStep, Flow, FlowRun  # noqa: F401
+from .batching import MicroBatcher, stack_payloads, unstack_results  # noqa: F401
+from .endpoint import Endpoint  # noqa: F401
+from .executor import Executor  # noqa: F401
+from .futures import TaskEnvelope, TaskFuture, TaskState  # noqa: F401
+from .heartbeat import HeartbeatMonitor, LatencyTracker  # noqa: F401
+from .memoization import MemoCache  # noqa: F401
+from .provider import (  # noqa: F401
+    LocalThreadProvider,
+    Provider,
+    ProviderSpec,
+    SlurmProvider,
+    TPUPodProvider,
+)
+from .registry import FunctionRegistry, RegisteredFunction, hash_function  # noqa: F401
+from .scheduler import Scheduler  # noqa: F401
+from .serializer import packb, payload_hash, unpackb  # noqa: F401
+from .service import FunctionService  # noqa: F401
+from .warming import WarmPool  # noqa: F401
+from .worker import Worker  # noqa: F401

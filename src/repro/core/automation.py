@@ -1,0 +1,111 @@
+"""Automation flows (paper §5.6: Globus Automate ActionProvider).
+
+funcX exposes start/cancel/status REST endpoints so automation platforms can
+run functions as flow steps. Here a :class:`Flow` is a list of
+:class:`ActionStep`\\ s; each step invokes a registered function on an
+endpoint, optionally transforming the running document between steps — the
+event-driven pipeline pattern of the five science case studies (§7).
+"""
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from .auth import Token
+from .futures import TaskFuture
+from .service import FunctionService
+
+
+@dataclass
+class ActionStep:
+    function_id: str
+    endpoint_id: Optional[str] = None
+    # maps the flow document -> this step's payload (default: identity)
+    prepare: Callable[[Any], Any] = lambda doc: doc
+    # merges the step result back into the flow document (default: replace)
+    merge: Callable[[Any, Any], Any] = lambda doc, result: result
+    memoize: bool = False
+    name: str = ""
+
+
+@dataclass
+class FlowRun:
+    flow_id: str
+    state: str = "ACTIVE"             # ACTIVE | SUCCEEDED | FAILED | CANCELLED
+    step_index: int = 0
+    document: Any = None
+    history: List[dict] = field(default_factory=list)
+    current: Optional[TaskFuture] = None
+
+
+class Flow:
+    """A linear automation flow. (The paper's flows are linear sequences of
+    actions; branching/eventing is left to the caller.)"""
+
+    def __init__(self, steps: List[ActionStep], name: str = "flow"):
+        self.steps = steps
+        self.name = name
+
+    # ActionProvider interface: start / status / cancel / release ----------
+    def start(self, service: FunctionService, document: Any,
+              token: Optional[Token] = None) -> FlowRun:
+        run = FlowRun(flow_id=f"flow-{uuid.uuid4().hex[:8]}", document=document)
+        self._advance(service, run, token)
+        return run
+
+    def _advance(self, service: FunctionService, run: FlowRun,
+                 token: Optional[Token]) -> None:
+        if run.step_index >= len(self.steps):
+            run.state = "SUCCEEDED"
+            run.current = None
+            return
+        step = self.steps[run.step_index]
+        payload = step.prepare(run.document)
+        fut = service.run(
+            step.function_id, payload, endpoint_id=step.endpoint_id,
+            memoize=step.memoize, token=token,
+        )
+        run.current = fut
+
+        def _on_done(f: TaskFuture, step=step) -> None:
+            if run.state == "CANCELLED":
+                return
+            exc = f.exception()
+            if exc is not None:
+                run.state = "FAILED"
+                run.history.append({"step": step.name, "error": repr(exc)})
+                return
+            run.document = step.merge(run.document, f.result())
+            run.history.append(
+                {"step": step.name, "task_id": f.task_id, "latency": f.latency_breakdown()}
+            )
+            run.step_index += 1
+            self._advance(service, run, token)
+
+        fut.add_done_callback(_on_done)
+
+    @staticmethod
+    def status(run: FlowRun) -> dict:
+        return {"flow_id": run.flow_id, "state": run.state,
+                "step": run.step_index, "history": list(run.history)}
+
+    @staticmethod
+    def cancel(run: FlowRun) -> None:
+        run.state = "CANCELLED"
+
+    @staticmethod
+    def wait(run: FlowRun, timeout: float = 60.0) -> Any:
+        t0 = time.monotonic()
+        while run.state == "ACTIVE":
+            if time.monotonic() - t0 > timeout:
+                raise TimeoutError(f"flow {run.flow_id} still active")
+            cur = run.current
+            if cur is not None:
+                cur._event.wait(0.05)
+            else:
+                time.sleep(0.005)
+        if run.state == "FAILED":
+            raise RuntimeError(f"flow failed: {run.history[-1]}")
+        return run.document

@@ -1,0 +1,325 @@
+"""Endpoint: manager + executor pool (paper §5.3–5.4).
+
+The Manager "queues and forwards function execution requests and results,
+interacts with resource schedulers, and batches and load balances requests";
+it detects failures via heartbeats + a watchdog, re-executes lost tasks,
+suspends failed executors, and scales resources through the provider.
+
+Beyond-paper: speculative re-execution of stragglers (p95 × multiplier,
+first-result-wins) and warm-affinity scheduling.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import uuid
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+from .executor import Executor
+from .futures import TaskEnvelope, TaskFuture, TaskState
+from .heartbeat import HeartbeatMonitor, LatencyTracker
+from .provider import LocalThreadProvider, Provider, ProviderSpec
+from .registry import FunctionRegistry
+from .scheduler import Scheduler
+from .worker import TaskResult
+
+
+class Endpoint:
+    def __init__(
+        self,
+        name: str,
+        registry: FunctionRegistry,
+        n_executors: int = 1,
+        workers_per_executor: int = 4,
+        prefetch: int = 0,
+        policy: str = "random",
+        provider: Optional[Provider] = None,
+        heartbeat_interval_s: float = 0.25,
+        heartbeat_threshold: float = 2.0,
+        elastic: bool = False,
+        max_executors: int = 8,
+        speculation: bool = False,
+        speculation_multiplier: float = 3.0,
+        warm_ttl_s: float = 300.0,
+        tick_s: float = 0.001,
+        dispatch_interval_s: float = 0.0,
+        result_hook: Optional[Callable[[TaskEnvelope, TaskResult], None]] = None,
+        memo_probe: Optional[Callable[[TaskEnvelope], tuple]] = None,
+    ):
+        self.endpoint_id = f"ep-{uuid.uuid4().hex[:8]}"
+        self.name = name
+        self.registry = registry
+        self.workers_per_executor = workers_per_executor
+        self.prefetch = prefetch
+        self.scheduler = Scheduler(policy)
+        self.monitor = HeartbeatMonitor(heartbeat_interval_s, heartbeat_threshold)
+        self.heartbeat_interval_s = heartbeat_interval_s
+        self.elastic = elastic
+        self.speculation = speculation
+        self.speculation_multiplier = speculation_multiplier
+        self.warm_ttl_s = warm_ttl_s
+        self.tick_s = tick_s
+        # simulated manager<->executor RTT: dispatch rounds happen at most
+        # this often (0 = in-process, dispatch on every loop iteration)
+        self.dispatch_interval_s = dispatch_interval_s
+        self.result_hook = result_hook
+        self.memo_probe = memo_probe
+        self.tracker = LatencyTracker()
+
+        self.result_queue: "queue.Queue[TaskResult]" = queue.Queue()
+        self._queue: deque[TaskEnvelope] = deque()
+        self._qlock = threading.Lock()
+        self.futures: Dict[str, TaskFuture] = {}
+        self._flock = threading.Lock()
+        self.executors: Dict[str, Executor] = {}
+        self._speculated: set[str] = set()
+        self.completed = 0
+        self.requeued = 0
+        self.lost_executors = 0
+
+        if provider is None:
+            provider = LocalThreadProvider(
+                ProviderSpec(
+                    init_blocks=n_executors,
+                    max_blocks=max(max_executors, n_executors),
+                    workers_per_block=workers_per_executor,
+                )
+            )
+        self.provider = provider
+        if isinstance(provider, LocalThreadProvider):
+            provider.bind_factory(self._make_executor)
+        provider.scale_out(n_executors)
+
+        self._alive = True
+        self._manager = threading.Thread(target=self._manager_loop, name=f"{name}/mgr", daemon=True)
+        self._manager.start()
+
+    # -- executor factory (provider blocks -> Executors) -----------------
+    def _make_executor(self, block_id: str) -> Executor:
+        ex = Executor(
+            executor_id=f"{self.name}/{block_id}",
+            registry=self.registry,
+            result_queue=self.result_queue,
+            n_workers=self.workers_per_executor,
+            prefetch=self.prefetch,
+            warm_ttl_s=self.warm_ttl_s,
+            monitor=self.monitor,
+            heartbeat_interval_s=self.heartbeat_interval_s,
+        )
+        self.executors[ex.executor_id] = ex
+        return ex
+
+    # -- submission --------------------------------------------------------
+    def submit(self, env: TaskEnvelope, future: TaskFuture) -> None:
+        env.timestamps.endpoint_in = time.monotonic()
+        future.timestamps = env.timestamps
+        with self._flock:
+            self.futures[env.task_id] = future
+        future.set_state(TaskState.QUEUED)
+        with self._qlock:
+            self._queue.append(env)
+
+    def queue_depth(self) -> int:
+        with self._qlock:
+            return len(self._queue)
+
+    # -- manager loop -------------------------------------------------------
+    def _manager_loop(self) -> None:
+        last_watchdog = 0.0
+        last_dispatch = 0.0
+        while self._alive:
+            # 1) results (block briefly here — it is the latency-critical path)
+            try:
+                res = self.result_queue.get(timeout=self.tick_s)
+                self._handle_result(res)
+                # opportunistically drain the rest
+                while True:
+                    try:
+                        self._handle_result(self.result_queue.get_nowait())
+                    except queue.Empty:
+                        break
+            except queue.Empty:
+                pass
+            # 2) watchdog + elasticity + speculation at heartbeat cadence
+            now = time.monotonic()
+            if now - last_watchdog >= self.heartbeat_interval_s:
+                last_watchdog = now
+                self._watchdog()
+                if self.elastic:
+                    self._autoscale()
+                if self.speculation:
+                    self._speculate()
+            # 3) dispatch (rate-limited when simulating a WAN RTT)
+            now = time.monotonic()
+            if now - last_dispatch >= self.dispatch_interval_s:
+                last_dispatch = now
+                self._dispatch()
+
+    def _handle_result(self, res: TaskResult) -> None:
+        env = res.envelope
+        with self._flock:
+            fut = self.futures.get(env.task_id)
+        if fut is None:
+            return
+        if res.error is not None:
+            if env.retries < env.max_retries:
+                self.requeued += 1
+                retry = env.clone_for_retry()
+                with self._flock:
+                    self.futures[retry.task_id] = fut
+                with self._qlock:
+                    self._queue.appendleft(retry)
+            else:
+                fut.set_exception(res.exception or RuntimeError(res.error))
+            return
+        won = fut.set_result(res.value)
+        if won:
+            self.completed += 1
+            ts = env.timestamps
+            if ts.exec_end and ts.endpoint_in:
+                self.tracker.record(ts.exec_end - ts.endpoint_in)
+            if self.result_hook is not None:
+                try:
+                    self.result_hook(env, res)
+                except Exception:
+                    pass
+
+    def _dispatch(self) -> None:
+        while True:
+            with self._qlock:
+                if not self._queue:
+                    return
+                env = self._queue[0]
+            executors = list(self.executors.values())
+            ex = self.scheduler.choose(executors, env)
+            if ex is None:
+                return
+            with self._qlock:
+                if not self._queue or self._queue[0] is not env:
+                    continue
+                self._queue.popleft()
+            # queue-time memoization: a result computed while this task waited
+            # serves it without dispatch (paper Table 3: concurrent repeats)
+            if env.memoize and self.memo_probe is not None:
+                hit, value = self.memo_probe(env)
+                if hit:
+                    with self._flock:
+                        fut = self.futures.get(env.task_id)
+                    if fut is not None and fut.set_result(value, TaskState.MEMOIZED):
+                        self.completed += 1
+                    continue
+            env.timestamps.dispatched = time.monotonic()
+            with self._flock:
+                fut = self.futures.get(env.task_id)
+            if fut is not None:
+                fut.set_state(TaskState.DISPATCHED)
+            ex.submit(env)
+
+    def _watchdog(self) -> None:
+        for eid in self.monitor.dead():
+            ex = self.executors.get(eid)
+            self.monitor.suspend(eid)
+            self.lost_executors += 1
+            if ex is None:
+                continue
+            ex.suspend()
+            lost = ex.take_in_flight()
+            # also recover tasks sitting in the dead executor's local queue
+            while True:
+                try:
+                    lost.append(ex.inbox.get_nowait())
+                except queue.Empty:
+                    break
+            for env in lost:
+                with self._flock:
+                    fut = self.futures.get(env.task_id)
+                if fut is None or fut.done():
+                    continue
+                if env.retries < env.max_retries:
+                    fut.set_state(TaskState.LOST)
+                    retry = env.clone_for_retry()
+                    with self._flock:
+                        self.futures[retry.task_id] = fut
+                    with self._qlock:
+                        self._queue.appendleft(retry)
+                    self.requeued += 1
+                else:
+                    fut.set_exception(RuntimeError(f"task lost with executor {eid}"))
+            del self.executors[eid]
+            if self.elastic:
+                self.provider.scale_out(1)  # replacement block
+
+    def _autoscale(self) -> None:
+        capacity = sum(e.n_workers for e in self.executors.values() if e.accepting())
+        depth = self.queue_depth()
+        if depth > 2 * max(capacity, 1):
+            self.provider.scale_out(1)
+
+    def _speculate(self) -> None:
+        p95 = self.tracker.p95()
+        if p95 is None:
+            return
+        limit = p95 * self.speculation_multiplier
+        for ex in list(self.executors.values()):
+            for env in ex.running_longer_than(limit):
+                if env.task_id in self._speculated or env.speculative_of:
+                    continue
+                self._speculated.add(env.task_id)
+                dup = TaskEnvelope(
+                    task_id=f"{env.task_id}#spec",
+                    function_id=env.function_id,
+                    payload=env.payload,
+                    container=env.container,
+                    memoize=env.memoize,
+                    max_retries=0,
+                    speculative_of=env.task_id,
+                    timestamps=env.timestamps,
+                )
+                with self._flock:
+                    fut = self.futures.get(env.task_id)
+                    if fut is None or fut.done():
+                        continue
+                    self.futures[dup.task_id] = fut
+                with self._qlock:
+                    self._queue.appendleft(dup)
+
+    # -- fault injection ----------------------------------------------------
+    def kill_executor(self, index: int = 0) -> str:
+        """Hard-kill the index-th executor (Fig. 7 fault experiment)."""
+        eid = sorted(self.executors)[index]
+        self.executors[eid].kill()
+        return eid
+
+    # -- lifecycle -----------------------------------------------------------
+    def shutdown(self) -> None:
+        self._alive = False
+        self._manager.join(timeout=2.0)
+        for ex in list(self.executors.values()):
+            ex.shutdown()
+        self.executors.clear()
+
+    def wait_idle(self, timeout: float = 30.0) -> bool:
+        """Wait until queue and all executors are drained."""
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            busy = self.queue_depth() or any(
+                len(e.in_flight) or e.inbox.qsize() for e in self.executors.values()
+            )
+            if not busy:
+                return True
+            time.sleep(0.005)
+        return False
+
+    def stats(self) -> dict:
+        return {
+            "endpoint_id": self.endpoint_id,
+            "name": self.name,
+            "queue_depth": self.queue_depth(),
+            "completed": self.completed,
+            "requeued": self.requeued,
+            "lost_executors": self.lost_executors,
+            "executors": {eid: ex.stats() for eid, ex in self.executors.items()},
+            "p95_latency_s": self.tracker.p95(),
+        }

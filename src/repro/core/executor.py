@@ -1,0 +1,167 @@
+"""Executor: per-node worker pool (paper §5.3).
+
+"Executors represent, and communicate on behalf of, the collective capacity
+of the workers on a single node" — they partition the node among workers,
+advertise available capacity to the manager (which enables executor-side
+batching), emit heartbeats, and forward results. Prefetch (§5.5) is the
+capacity they advertise beyond currently-idle workers.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from .futures import TaskEnvelope
+from .heartbeat import HeartbeatMonitor
+from .registry import FunctionRegistry
+from .warming import WarmPool
+from .worker import TaskResult, Worker
+
+
+class Executor:
+    def __init__(
+        self,
+        executor_id: str,
+        registry: FunctionRegistry,
+        result_queue: "queue.Queue[TaskResult]",
+        n_workers: int = 4,
+        prefetch: int = 0,
+        warm_ttl_s: float = 300.0,
+        monitor: Optional[HeartbeatMonitor] = None,
+        heartbeat_interval_s: float = 2.0,
+    ):
+        self.executor_id = executor_id
+        self.registry = registry
+        self.result_queue = result_queue
+        self.n_workers = n_workers
+        self.prefetch = prefetch
+        self.warm_pool = WarmPool(ttl_s=warm_ttl_s)
+        self.inbox: "queue.Queue[TaskEnvelope]" = queue.Queue()
+        self.monitor = monitor
+        self.heartbeat_interval_s = heartbeat_interval_s
+
+        self._alive = True
+        self._suspended = False
+        self._lock = threading.Lock()
+        self.in_flight: Dict[str, TaskEnvelope] = {}
+        self.completed = 0
+
+        self.workers: List[Worker] = []
+        outbox: "queue.Queue[TaskResult]" = queue.Queue()
+        self._outbox = outbox
+        for i in range(n_workers):
+            w = Worker(
+                worker_id=f"{executor_id}/w{i}",
+                inbox=self.inbox,
+                outbox=outbox,
+                registry=registry,
+                warm_pool=self.warm_pool,
+            )
+            self.workers.append(w)
+            w.start()
+
+        self._forwarder = threading.Thread(
+            target=self._forward_results, name=f"{executor_id}/fwd", daemon=True
+        )
+        self._forwarder.start()
+
+        if monitor is not None:
+            monitor.register(executor_id)
+            self._beater = threading.Thread(
+                target=self._beat_loop, name=f"{executor_id}/hb", daemon=True
+            )
+            self._beater.start()
+
+    # -- capacity advertising (enables executor-side batching) -----------
+    def idle_workers(self) -> int:
+        return sum(1 for w in self.workers if not w.busy and w.is_alive())
+
+    def free_capacity(self) -> int:
+        """Tasks this executor is willing to accept right now: idle workers
+        plus the prefetch allowance, minus what is already queued locally."""
+        if not self.accepting():
+            return 0
+        return max(0, self.idle_workers() + self.prefetch - self.inbox.qsize())
+
+    def accepting(self) -> bool:
+        return self._alive and not self._suspended
+
+    def has_warm(self, key: Tuple) -> bool:
+        return self.warm_pool.contains(key)
+
+    # -- task intake ------------------------------------------------------
+    def submit(self, env: TaskEnvelope) -> None:
+        env.executor_id = self.executor_id
+        with self._lock:
+            self.in_flight[env.task_id] = env
+        self.inbox.put(env)
+
+    def take_in_flight(self) -> List[TaskEnvelope]:
+        """Called by the watchdog after this executor is declared dead."""
+        with self._lock:
+            tasks = list(self.in_flight.values())
+            self.in_flight.clear()
+            return tasks
+
+    def running_longer_than(self, seconds: float) -> List[TaskEnvelope]:
+        """Straggler candidates: dispatched here and executing for > seconds."""
+        now = time.monotonic()
+        with self._lock:
+            return [
+                e
+                for e in self.in_flight.values()
+                if e.timestamps.exec_start and (now - e.timestamps.exec_start) > seconds
+            ]
+
+    # -- internals ----------------------------------------------------------
+    def _forward_results(self) -> None:
+        while self._alive:
+            try:
+                res = self._outbox.get(timeout=0.02)
+            except queue.Empty:
+                continue
+            with self._lock:
+                self.in_flight.pop(res.envelope.task_id, None)
+                self.completed += 1
+            self.result_queue.put(res)
+
+    def _beat_loop(self) -> None:
+        while self._alive:
+            self.monitor.beat(self.executor_id)
+            self.warm_pool.sweep()
+            time.sleep(self.heartbeat_interval_s)
+
+    # -- lifecycle ------------------------------------------------------------
+    def kill(self) -> None:
+        """Simulated node failure: heartbeats stop, in-flight results vanish."""
+        self._alive = False
+        for w in self.workers:
+            w.simulate_failure()
+
+    def suspend(self) -> None:
+        """Paper: 'suspend executors to prevent further tasks being scheduled
+        to failed executors'."""
+        self._suspended = True
+
+    def shutdown(self) -> None:
+        self._alive = False
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join(timeout=1.0)
+        if self.monitor is not None:
+            self.monitor.deregister(self.executor_id)
+
+    def stats(self) -> dict:
+        return {
+            "executor_id": self.executor_id,
+            "workers": self.n_workers,
+            "idle": self.idle_workers(),
+            "queued": self.inbox.qsize(),
+            "in_flight": len(self.in_flight),
+            "completed": self.completed,
+            "warm": self.warm_pool.stats(),
+            "accepting": self.accepting(),
+        }

@@ -1,0 +1,174 @@
+"""Task envelopes and futures.
+
+funcX invocations are asynchronous: ``run()`` returns a :class:`TaskFuture`
+whose result is delivered by the endpoint's manager loop. Every task carries a
+timestamp trail so the paper's latency decomposition (Fig. 5: t_c / t_w / t_m /
+t_e) can be reconstructed per invocation.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"
+    QUEUED = "queued"          # accepted by service, waiting in endpoint queue
+    DISPATCHED = "dispatched"  # assigned to an executor
+    RUNNING = "running"        # picked up by a worker
+    SUCCESS = "success"
+    FAILED = "failed"
+    LOST = "lost"              # executor died while task in flight
+    MEMOIZED = "memoized"      # served from the memo cache
+
+
+_task_counter = itertools.count()
+
+
+def new_task_id() -> str:
+    return f"task-{next(_task_counter)}-{uuid.uuid4().hex[:8]}"
+
+
+@dataclass
+class Timestamps:
+    """Wall-clock trail. All fields are ``time.monotonic()`` values."""
+
+    client_submit: float = 0.0     # client called run()
+    service_in: float = 0.0        # service accepted the request
+    endpoint_in: float = 0.0       # endpoint queue insertion
+    dispatched: float = 0.0        # manager assigned to an executor
+    exec_start: float = 0.0        # worker began executing
+    exec_end: float = 0.0          # worker finished executing
+    result_ready: float = 0.0      # future completed
+
+    def breakdown(self) -> dict:
+        """Paper Fig. 5 decomposition (seconds).
+
+        t_c: client <-> service round-trip overhead
+        t_w: service routing (accept -> endpoint queue)
+        t_m: endpoint/manager latency (queue + dispatch + worker pickup)
+        t_e: function execution time
+        """
+        t_e = max(0.0, self.exec_end - self.exec_start)
+        t_m = max(0.0, self.exec_start - self.endpoint_in)
+        t_w = max(0.0, self.endpoint_in - self.service_in)
+        total = max(0.0, self.result_ready - self.client_submit)
+        t_c = max(0.0, total - t_w - t_m - t_e)
+        return {"t_c": t_c, "t_w": t_w, "t_m": t_m, "t_e": t_e, "total": total}
+
+
+@dataclass
+class TaskEnvelope:
+    """The unit that travels service -> endpoint -> executor -> worker."""
+
+    task_id: str
+    function_id: str
+    payload: bytes                      # serialized input document
+    container: str = "default"          # executable-variant key (container analogue)
+    memoize: bool = False
+    max_retries: int = 2
+    retries: int = 0
+    speculative_of: Optional[str] = None  # task_id this is a straggler-duplicate of
+    timestamps: Timestamps = field(default_factory=Timestamps)
+    # Filled in by the endpoint:
+    executor_id: Optional[str] = None
+
+    def clone_for_retry(self) -> "TaskEnvelope":
+        env = TaskEnvelope(
+            task_id=self.task_id,
+            function_id=self.function_id,
+            payload=self.payload,
+            container=self.container,
+            memoize=self.memoize,
+            max_retries=self.max_retries,
+            retries=self.retries + 1,
+            timestamps=self.timestamps,
+        )
+        return env
+
+
+class TaskFuture:
+    """Thread-safe future for an asynchronous function invocation."""
+
+    def __init__(self, task_id: str):
+        self.task_id = task_id
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._state = TaskState.PENDING
+        self._result: Any = None
+        self._exception: Optional[BaseException] = None
+        self.timestamps = Timestamps()
+        self._callbacks: list[Callable[["TaskFuture"], None]] = []
+
+    # -- producer side -------------------------------------------------
+    def set_state(self, state: TaskState) -> None:
+        with self._lock:
+            if not self._event.is_set():
+                self._state = state
+
+    def set_result(self, value: Any, state: TaskState = TaskState.SUCCESS) -> bool:
+        """Complete the future. Returns False if already complete (idempotent:
+        speculative duplicates race and only the first wins)."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._result = value
+            self._state = state
+            self.timestamps.result_ready = time.monotonic()
+            self._event.set()
+            callbacks = list(self._callbacks)
+        for cb in callbacks:
+            cb(self)
+        return True
+
+    def set_exception(self, exc: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._exception = exc
+            self._state = TaskState.FAILED
+            self.timestamps.result_ready = time.monotonic()
+            self._event.set()
+            callbacks = list(self._callbacks)
+        for cb in callbacks:
+            cb(self)
+        return True
+
+    # -- consumer side -------------------------------------------------
+    @property
+    def state(self) -> TaskState:
+        with self._lock:
+            return self._state
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"{self.task_id} not complete after {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"{self.task_id} not complete after {timeout}s")
+        return self._exception
+
+    def add_done_callback(self, cb: Callable[["TaskFuture"], None]) -> None:
+        run_now = False
+        with self._lock:
+            if self._event.is_set():
+                run_now = True
+            else:
+                self._callbacks.append(cb)
+        if run_now:
+            cb(self)
+
+    def latency_breakdown(self) -> dict:
+        return self.timestamps.breakdown()

@@ -1,0 +1,54 @@
+"""Task -> executor scheduling.
+
+The paper's manager "uses a randomized scheduling algorithm to allocate
+functions to executors" (§5.3) and names resource-aware scheduling as future
+work (§8). We implement randomized scheduling as the paper-faithful baseline
+plus three beyond-paper policies measured in the benchmarks:
+
+- round_robin: classic fair rotation.
+- least_loaded: pick the executor with the most free capacity.
+- warm_affinity: prefer executors that already hold a warm executable for the
+  task's (function, container) — the funcX "future work" of resource-aware
+  scheduling, specialized to compile-cache locality.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Optional, Sequence
+
+from .futures import TaskEnvelope
+
+POLICIES = ("random", "round_robin", "least_loaded", "warm_affinity")
+
+
+class Scheduler:
+    def __init__(self, policy: str = "random", seed: Optional[int] = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")
+        self.policy = policy
+        self._rng = random.Random(seed)
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    def choose(self, executors: Sequence, task: TaskEnvelope):
+        """Pick an executor from `executors` (each exposes .free_capacity(),
+        .has_warm(key), .executor_id). Returns None if none have capacity."""
+        live = [ex for ex in executors if ex.accepting() and ex.free_capacity() > 0]
+        if not live:
+            return None
+        if self.policy == "random":
+            return self._rng.choice(live)
+        if self.policy == "round_robin":
+            with self._lock:
+                ex = live[self._rr % len(live)]
+                self._rr += 1
+            return ex
+        if self.policy == "least_loaded":
+            return max(live, key=lambda ex: ex.free_capacity())
+        if self.policy == "warm_affinity":
+            key = (task.function_id, task.container)
+            warm = [ex for ex in live if ex.has_warm(key)]
+            pool = warm or live
+            return max(pool, key=lambda ex: ex.free_capacity())
+        raise AssertionError(self.policy)

@@ -1,0 +1,85 @@
+"""Payload serialization: pytree <-> bytes.
+
+funcX exchanges JSON documents; our functions exchange array pytrees, so the
+wire format is msgpack with a numpy extension type. The serializer is also the
+basis for memoization keys (``payload_hash``): packing is canonical (dict keys
+sorted) so equal payloads hash equally.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any
+
+import msgpack
+import numpy as np
+
+_EXT_NDARRAY = 1
+_EXT_TUPLE = 2
+_EXT_SET = 3
+_EXT_COMPLEX = 4
+
+
+def _default(obj: Any):
+    # jax.Array and anything array-like -> ndarray ext
+    if hasattr(obj, "__array__") or isinstance(obj, np.ndarray):
+        arr = np.asarray(obj)
+        header = msgpack.packb((arr.dtype.str, arr.shape), use_bin_type=True)
+        if arr.dtype == object:
+            raise TypeError("object arrays are not serializable")
+        body = arr.tobytes(order="C")
+        return msgpack.ExtType(_EXT_NDARRAY, header + body)
+    if isinstance(obj, tuple):
+        return msgpack.ExtType(_EXT_TUPLE, packb(list(obj)))
+    if isinstance(obj, (set, frozenset)):
+        return msgpack.ExtType(_EXT_SET, packb(sorted(obj, key=repr)))
+    if isinstance(obj, complex):
+        return msgpack.ExtType(_EXT_COMPLEX, packb([obj.real, obj.imag]))
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    raise TypeError(f"cannot serialize {type(obj)!r}")
+
+
+def _ext_hook(code: int, data: bytes):
+    if code == _EXT_NDARRAY:
+        unpacker = msgpack.Unpacker(use_list=True, raw=False)
+        unpacker.feed(data)
+        dtype_str, shape = unpacker.unpack()
+        offset = unpacker.tell()
+        arr = np.frombuffer(data[offset:], dtype=np.dtype(dtype_str))
+        return arr.reshape(shape)
+    if code == _EXT_TUPLE:
+        return tuple(unpackb(data))
+    if code == _EXT_SET:
+        return set(unpackb(data))
+    if code == _EXT_COMPLEX:
+        re, im = unpackb(data)
+        return complex(re, im)
+    return msgpack.ExtType(code, data)
+
+
+def _canonicalize(obj: Any) -> Any:
+    """Sort dict keys recursively so packing is deterministic."""
+    if isinstance(obj, dict):
+        return {k: _canonicalize(obj[k]) for k in sorted(obj, key=repr)}
+    if isinstance(obj, (list, tuple)):
+        typ = type(obj)
+        out = [_canonicalize(v) for v in obj]
+        return typ(out) if typ is tuple else out
+    return obj
+
+
+def packb(obj: Any) -> bytes:
+    return msgpack.packb(_canonicalize(obj), default=_default, use_bin_type=True)
+
+
+def unpackb(data: bytes) -> Any:
+    return msgpack.unpackb(data, ext_hook=_ext_hook, raw=False, strict_map_key=False)
+
+
+def payload_hash(obj: Any) -> str:
+    """Canonical content hash of a payload (memoization key component)."""
+    return hashlib.sha256(packb(obj)).hexdigest()

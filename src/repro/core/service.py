@@ -1,0 +1,208 @@
+"""The funcX service (paper §5.1): registry + routing + memoization + auth.
+
+REST-shaped API surface:
+    register_function(fn, ...)          -> function_id
+    register_endpoint(endpoint, ...)    -> endpoint_id
+    run(function_id, payload, ...)      -> TaskFuture (async) or result (sync)
+    batch_run(function_id, payloads)    -> [TaskFuture]  (user-driven batching)
+    status(task) / result(task)
+
+All invocation paths stamp the Fig.-5 timestamp trail. Memoization (§5.5) is
+service-side: hits complete the future immediately without touching an
+endpoint.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from . import auth as auth_mod
+from . import serializer
+from .auth import Token, TokenAuthority
+from .batching import stack_payloads, unstack_results
+from .endpoint import Endpoint
+from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
+from .memoization import MemoCache
+from .registry import FunctionRegistry
+from .worker import TaskResult
+
+
+class FunctionService:
+    def __init__(
+        self,
+        authority: Optional[TokenAuthority] = None,
+        memo_entries: int = 4096,
+    ):
+        self.registry = FunctionRegistry()
+        self.memo = MemoCache(max_entries=memo_entries)
+        self.authority = authority
+        self.endpoints: Dict[str, Endpoint] = {}
+        self._default_endpoint: Optional[str] = None
+
+    # -- auth ------------------------------------------------------------
+    def _identity(self, token: Optional[Token], scope: str) -> str:
+        if self.authority is None:
+            return "anonymous"
+        return self.authority.verify(token, scope)
+
+    # -- registration ------------------------------------------------------
+    def register_function(
+        self,
+        fn: Callable,
+        name: Optional[str] = None,
+        description: str = "",
+        public: bool = False,
+        token: Optional[Token] = None,
+        **metadata: Any,
+    ) -> str:
+        owner = self._identity(token, auth_mod.SCOPE_REGISTER_FUNCTION)
+        return self.registry.register(
+            fn, name=name, description=description, owner=owner, public=public, **metadata
+        )
+
+    def register_endpoint(
+        self,
+        endpoint: Endpoint,
+        default: bool = False,
+        token: Optional[Token] = None,
+    ) -> str:
+        self._identity(token, auth_mod.SCOPE_REGISTER_ENDPOINT)
+        endpoint.result_hook = self._on_result
+        endpoint.memo_probe = self._memo_probe
+        self.endpoints[endpoint.endpoint_id] = endpoint
+        if default or self._default_endpoint is None:
+            self._default_endpoint = endpoint.endpoint_id
+        return endpoint.endpoint_id
+
+    def make_endpoint(self, name: str, default: bool = False, token: Optional[Token] = None,
+                      **kwargs: Any) -> Endpoint:
+        """Convenience: construct an Endpoint bound to this service's registry."""
+        ep = Endpoint(name=name, registry=self.registry, result_hook=self._on_result, **kwargs)
+        self.register_endpoint(ep, default=default, token=token)
+        return ep
+
+    # -- invocation ---------------------------------------------------------
+    def run(
+        self,
+        function_id: str,
+        payload: Any,
+        endpoint_id: Optional[str] = None,
+        container: str = "default",
+        memoize: bool = False,
+        sync: bool = False,
+        max_retries: int = 2,
+        token: Optional[Token] = None,
+        timeout: Optional[float] = None,
+    ) -> Any:
+        t_submit = time.monotonic()
+        identity = self._identity(token, auth_mod.SCOPE_INVOKE)
+        rf = self.registry.get(function_id)
+        if not self.registry.authorized(function_id, identity):
+            raise auth_mod.AuthError(f"{identity} may not invoke {rf.name}")
+
+        wire = rf.metadata.get("pass_through", False)
+        payload_bytes: Any = payload if wire else serializer.packb(payload)
+
+        future = TaskFuture(new_task_id())
+        future.timestamps.client_submit = t_submit
+        future.timestamps.service_in = time.monotonic()
+
+        digest = None
+        if memoize and rf.deterministic and not wire:
+            digest = serializer.payload_hash(payload)
+            hit, value = self.memo.get(function_id, digest)
+            if hit:
+                future.set_result(value, state=TaskState.MEMOIZED)
+                return future.result(timeout) if sync else future
+
+        ep = self._endpoint(endpoint_id)
+        env = TaskEnvelope(
+            task_id=future.task_id,
+            function_id=function_id,
+            payload=payload_bytes,
+            container=container,
+            memoize=memoize and digest is not None,
+            max_retries=max_retries,
+        )
+        env.timestamps.client_submit = future.timestamps.client_submit
+        env.timestamps.service_in = future.timestamps.service_in
+        if digest is not None:
+            env.__dict__["_memo_digest"] = digest
+        ep.submit(env, future)
+        return future.result(timeout) if sync else future
+
+    def batch_run(
+        self,
+        function_id: str,
+        payloads: Sequence[Any],
+        endpoint_id: Optional[str] = None,
+        user_batched: bool = False,
+        **kwargs: Any,
+    ) -> List[TaskFuture]:
+        """N invocations. With user_batched=True the payloads are stacked into
+        ONE invocation (paper §5.5 'user-driven batching', Fig. 8) and the
+        stacked result is split back into N per-request futures."""
+        if not user_batched:
+            return [self.run(function_id, p, endpoint_id, **kwargs) for p in payloads]
+        stacked = stack_payloads(list(payloads))
+        inner = self.run(function_id, stacked, endpoint_id, **kwargs)
+        outs = [TaskFuture(f"{inner.task_id}/{i}") for i in range(len(payloads))]
+
+        def _split(done: TaskFuture) -> None:
+            try:
+                results = unstack_results(done.result(), len(outs))
+                for f, r in zip(outs, results):
+                    f.timestamps = done.timestamps
+                    f.set_result(r)
+            except BaseException as exc:  # noqa: BLE001
+                for f in outs:
+                    f.set_exception(exc)
+
+        inner.add_done_callback(_split)
+        return outs
+
+    def map(self, function_id: str, payloads: Sequence[Any], endpoint_id: Optional[str] = None,
+            timeout: Optional[float] = 120.0, **kwargs: Any) -> List[Any]:
+        futs = self.batch_run(function_id, payloads, endpoint_id, **kwargs)
+        return [f.result(timeout) for f in futs]
+
+    # -- status/result (REST-shaped) ------------------------------------------
+    @staticmethod
+    def status(future: TaskFuture) -> str:
+        return future.state.value
+
+    @staticmethod
+    def result(future: TaskFuture, timeout: Optional[float] = None) -> Any:
+        return future.result(timeout)
+
+    # -- hooks -----------------------------------------------------------------
+    def _on_result(self, env: TaskEnvelope, res: TaskResult) -> None:
+        digest = env.__dict__.get("_memo_digest")
+        if env.memoize and digest is not None and res.error is None:
+            self.memo.put(env.function_id, digest, res.value)
+
+    def _memo_probe(self, env: TaskEnvelope):
+        """Queue-time memo lookup for the endpoint's dispatch loop."""
+        digest = env.__dict__.get("_memo_digest")
+        if digest is None:
+            return False, None
+        return self.memo.get(env.function_id, digest)
+
+    def _endpoint(self, endpoint_id: Optional[str]) -> Endpoint:
+        eid = endpoint_id or self._default_endpoint
+        if eid is None or eid not in self.endpoints:
+            raise KeyError(f"unknown endpoint {eid!r}; register one first")
+        return self.endpoints[eid]
+
+    # -- lifecycle ---------------------------------------------------------------
+    def shutdown(self) -> None:
+        for ep in self.endpoints.values():
+            ep.shutdown()
+        self.endpoints.clear()
+
+    def stats(self) -> dict:
+        return {
+            "functions": len(self.registry.list()),
+            "endpoints": {eid: ep.stats() for eid, ep in self.endpoints.items()},
+            "memo": self.memo.stats(),
+        }

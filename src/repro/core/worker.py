@@ -1,0 +1,138 @@
+"""Worker: executes one function at a time (paper §5.3).
+
+funcX workers "persist within containers and each executes one function at a
+time ... once a function is received it is deserialized and executed, and the
+serialized results are returned via the executor." Here a worker is a thread
+(on TPU: pinned to a device slice); the container is the warm executable it
+runs inside (see `warming.py`).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from . import serializer
+from .futures import TaskEnvelope
+from .registry import FunctionRegistry, RegisteredFunction
+from .warming import WarmPool
+
+
+@dataclass
+class TaskResult:
+    envelope: TaskEnvelope
+    value: Any = None                 # deserialized result (or bytes if wire=True)
+    error: Optional[str] = None
+    exception: Optional[BaseException] = None
+    worker_id: str = ""
+    cold_start: bool = False
+    compile_time_s: float = 0.0
+
+
+class _JaxExecutable:
+    """jit-wrapped registered function; AOT-compiles on construction when a
+    sample payload is available (so WarmPool timing captures the real compile
+    cost, the Table-4 'container instantiation' analogue)."""
+
+    def __init__(self, rf: RegisteredFunction, sample_payload: Any = None):
+        import jax
+
+        jit_kwargs = rf.metadata.get("jit_kwargs", {})
+        self._jitted = jax.jit(rf.fn, **jit_kwargs)
+        if sample_payload is not None:
+            try:
+                self._jitted.lower(sample_payload).compile()
+            except Exception:
+                pass  # shape-polymorphic usage: compile lazily per call
+
+    def __call__(self, payload: Any) -> Any:
+        out = self._jitted(payload)
+        import jax
+
+        return jax.block_until_ready(out)
+
+
+def build_executable(rf: RegisteredFunction, sample_payload: Any = None) -> Callable:
+    if rf.metadata.get("jax_jit", False):
+        return _JaxExecutable(rf, sample_payload)
+    return rf.fn
+
+
+class Worker(threading.Thread):
+    def __init__(
+        self,
+        worker_id: str,
+        inbox: "queue.Queue[TaskEnvelope]",
+        outbox: "queue.Queue[TaskResult]",
+        registry: FunctionRegistry,
+        warm_pool: WarmPool,
+        poll_s: float = 0.01,
+    ):
+        super().__init__(name=worker_id, daemon=True)
+        self.worker_id = worker_id
+        self.inbox = inbox
+        self.outbox = outbox
+        self.registry = registry
+        self.warm_pool = warm_pool
+        self.poll_s = poll_s
+        self._stop = threading.Event()
+        self._drop_inflight = threading.Event()  # simulated node failure
+        self.busy = False
+        self.executed = 0
+
+    # -- failure injection (tests / Fig. 7 benchmark) --------------------
+    def simulate_failure(self) -> None:
+        """Drop whatever is executing, produce no results, stop the loop."""
+        self._drop_inflight.set()
+        self._stop.set()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    # -- main loop --------------------------------------------------------
+    def run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                env = self.inbox.get(timeout=self.poll_s)
+            except queue.Empty:
+                continue
+            self.busy = True
+            try:
+                result = self._execute(env)
+            finally:
+                self.busy = False
+            if self._drop_inflight.is_set():
+                return  # vanish without reporting — watchdog must recover
+            self.outbox.put(result)
+            self.executed += 1
+
+    def _execute(self, env: TaskEnvelope) -> TaskResult:
+        env.timestamps.exec_start = time.monotonic()
+        try:
+            rf = self.registry.get(env.function_id)
+            payload = serializer.unpackb(env.payload) if isinstance(env.payload, bytes) else env.payload
+            key = (env.function_id, env.container)
+            executable, cold, dt = self.warm_pool.get_or_compile(
+                key, lambda: build_executable(rf, payload)
+            )
+            value = executable(payload)
+            if rf.metadata.get("serialize_result", True):
+                # wire-faithful: results cross the executor/manager boundary as
+                # bytes; deserialized once at the service edge.
+                value = serializer.unpackb(serializer.packb(value))
+            env.timestamps.exec_end = time.monotonic()
+            return TaskResult(
+                envelope=env, value=value, worker_id=self.worker_id,
+                cold_start=cold, compile_time_s=dt,
+            )
+        except BaseException as exc:  # noqa: BLE001 — report, don't die
+            env.timestamps.exec_end = time.monotonic()
+            return TaskResult(
+                envelope=env,
+                error=f"{type(exc).__name__}: {exc}\n{traceback.format_exc(limit=5)}",
+                exception=exc,
+                worker_id=self.worker_id,
+            )

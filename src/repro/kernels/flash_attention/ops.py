@@ -1,0 +1,58 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, jnp reference elsewhere.
+
+``impl``: "auto" (pallas on TPU backends, ref otherwise), "pallas",
+"pallas_interpret" (kernel body on CPU — used by the validation tests), "ref".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    q_offset=None,
+    kv_len=None,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """GQA attention. q (B,Sq,H,hd); k,v (B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "ref":
+        return ref.mha_reference(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len, scale=scale
+        )
+    from . import kernel  # deferred: pallas import is TPU-lowering-only
+
+    return kernel.flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=(impl == "pallas_interpret"),
+    )
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, scale=None, impl: str = "auto"):
+    """Single-token attention against a cache; entries <= pos are valid."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "ref":
+        return ref.decode_attention_reference(q, k_cache, v_cache, pos, scale=scale)
+    from . import kernel
+
+    return kernel.decode_attention_pallas(
+        q, k_cache, v_cache, pos, scale=scale, interpret=(impl == "pallas_interpret")
+    )

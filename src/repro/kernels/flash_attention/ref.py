@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for GQA/causal attention (the Pallas kernel's reference).
+
+Also the execution path on non-TPU backends and inside the dry-run (the
+compiled HLO of this code is what cost_analysis measures; the Pallas kernel
+is the TPU-target drop-in).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def mha_reference(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Skv, KV, hd)
+    v: jnp.ndarray,            # (B, Skv, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: Optional[jnp.ndarray] = None,  # scalar: absolute pos of q[0]
+    kv_len: Optional[jnp.ndarray] = None,    # scalar: #valid kv positions
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Grouped-query attention with optional causal masking and a kv validity
+    length (decode: q_offset = cache position, kv_len = cache fill level)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+
+    qg = q.reshape(B, Sq, KV, G, hd)
+    # scores: (B, KV, G, Sq, Skv) in fp32
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        q_pos = jnp.arange(Sq) + (q_offset if q_offset is not None else 0)
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        if kl.ndim == 0:
+            mask = mask & (kv_pos[None, :] < kl)
+        else:  # per-batch-row validity length (B,)
+            mask = mask[None] & (kv_pos[None, None, :] < kl[:, None, None])
+    if mask.ndim == 2:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    else:  # (B, Sq, Skv) -> broadcast over (KV, G)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)  # dv may differ (MLA)
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,           # (B, 1, H, hd) — single new token
+    k_cache: jnp.ndarray,     # (B, S, KV, hd)
+    v_cache: jnp.ndarray,     # (B, S, KV, hd)
+    pos: jnp.ndarray,         # scalar or (B,) int: write/attend position
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One-token attention against a cache whose entries <= pos are valid
+    (the new token's own k/v are assumed already written at `pos`).
+    Vector `pos` gives per-sequence positions (continuous batching)."""
+    return mha_reference(
+        q, k_cache, v_cache, causal=False, kv_len=pos + 1, scale=scale
+    )

@@ -1,0 +1,18 @@
+"""Dispatching wrapper: Pallas fused add+RMSNorm on TPU, jnp ref elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+
+
+def fused_add_rmsnorm(x, delta, scale, eps: float = 1e-5, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ref.fused_add_rmsnorm_reference(x, delta, scale, eps)
+    from . import kernel
+
+    return kernel.fused_add_rmsnorm_pallas(
+        x, delta, scale, eps, interpret=(impl == "pallas_interpret")
+    )

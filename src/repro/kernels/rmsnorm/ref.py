@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for fused residual-add + RMSNorm."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_add_rmsnorm_reference(
+    x: jnp.ndarray,          # (..., D) residual stream
+    delta: jnp.ndarray,      # (..., D) block output to add
+    scale: jnp.ndarray,      # (D,)
+    eps: float = 1e-5,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (new_residual = x + delta, normed(new_residual) * scale).
+    The pervasive transformer pattern; fusing keeps the fp32 intermediate in
+    VMEM instead of round-tripping two (T, D) tensors through HBM."""
+    res = (x.astype(jnp.float32) + delta.astype(jnp.float32))
+    var = jnp.mean(res * res, axis=-1, keepdims=True)
+    normed = res * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return res.astype(x.dtype), normed.astype(x.dtype)

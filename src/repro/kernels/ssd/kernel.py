@@ -1,0 +1,135 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU-native adaptation of the SSD block decomposition (arXiv:2405.21060 §6):
+grid = (batch, heads, chunks) with the chunk axis sequential ("arbitrary"
+semantics); the inter-chunk state (P x N) is carried in VMEM scratch across
+grid steps — the recurrence never round-trips HBM. Within a chunk everything
+is (chunk x chunk) / (chunk x P) matmuls on the MXU; cumulative sums are
+computed as lower-triangular matmuls (MXU-friendly) rather than serial scans.
+
+Validated against ref.ssd_reference in interpret mode by
+tests/test_kernels_ssd.py across shape/dtype/chunk sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,      # (1, chunk, 1, P)
+    dt_ref,     # (1, chunk, 1)
+    A_ref,      # (1,)
+    B_ref,      # (1, chunk, 1, N)
+    C_ref,      # (1, chunk, 1, N)
+    y_ref,      # (1, chunk, 1, P)
+    state_ref,  # out: (1, 1, P, N) — final state, written on last chunk
+    h_ref,      # VMEM scratch: (P, N) f32 carried state
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (c,)
+    A = A_ref[0].astype(jnp.float32)               # scalar
+    Bm = B_ref[0, :, 0, :].astype(jnp.float32)     # (c, N)
+    Cm = C_ref[0, :, 0, :].astype(jnp.float32)     # (c, N)
+
+    dA = dt * A                                    # (c,)
+    # cumulative sums as triangular matmuls (MXU-friendly, no serial scan)
+    idx = jax.lax.iota(jnp.int32, chunk)
+    tril_incl = (idx[:, None] >= idx[None, :]).astype(jnp.float32)     # i >= j
+    dA_cum = jax.lax.dot_general(
+        tril_incl, dA[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]                                        # (c,) inclusive cumsum
+
+    # L[i,j] = exp(sum_{j+1..i} dA) for i>=j else 0
+    diff = dA_cum[:, None] - dA_cum[None, :]
+    L = jnp.where(idx[:, None] >= idx[None, :], jnp.exp(diff), 0.0)
+
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (c, c)
+    dtx = x * dt[:, None]                          # (c, P)
+    y_diag = jax.lax.dot_general(
+        CB * L, dtx, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (c, P)
+
+    # inter-chunk: read out carried state, then update it
+    h = h_ref[...]                                 # (P, N)
+    y_off = jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(dA_cum)[:, None]                   # (c, P)
+
+    decay_to_end = jnp.exp(dA_cum[-1] - dA_cum)    # (c,)
+    chunk_state = jax.lax.dot_general(
+        dtx * decay_to_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (P, N)
+    h_new = h * jnp.exp(dA_cum[-1]) + chunk_state
+    h_ref[...] = h_new
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        state_ref[0, 0] = h_new.astype(state_ref.dtype)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,     # (B, S, H, P)
+    dt: jnp.ndarray,    # (B, S, H)
+    A: jnp.ndarray,     # (H,)
+    B_: jnp.ndarray,    # (B, S, G, N)
+    C_: jnp.ndarray,    # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,
+    return_final_state: bool = False,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    assert initial_state is None, "kernel path supports zero initial state"
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, ic: (b, ic, h)),
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ic, rep=rep: (b, ic, h // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, ic, rep=rep: (b, ic, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, dt, A, B_, C_)
+    return (y, state) if return_final_state else (y, None)

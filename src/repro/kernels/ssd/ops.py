@@ -1,0 +1,45 @@
+"""Dispatching wrapper: Pallas SSD scan on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def ssd(
+    x,
+    dt,
+    A,
+    B_,
+    C_,
+    *,
+    chunk: int = 256,
+    initial_state=None,
+    return_final_state: bool = False,
+    impl: str = "auto",
+):
+    """Mamba2 SSD scan. x (B,S,H,P), dt (B,S,H), A (H,), B_/C_ (B,S,G,N)."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "ref":
+        return ref.ssd_reference(
+            x, dt, A, B_, C_, chunk=chunk, initial_state=initial_state,
+            return_final_state=return_final_state,
+        )
+    from . import kernel  # deferred pallas import
+
+    return kernel.ssd_pallas(
+        x, dt, A, B_, C_, chunk=chunk, initial_state=initial_state,
+        return_final_state=return_final_state, interpret=(impl == "pallas_interpret"),
+    )
+
+
+def ssd_decode(state, x_t, dt_t, A, B_t, C_t):
+    """O(1) single-token SSD recurrence (no kernel needed: bandwidth-trivial)."""
+    return ref.ssd_decode_reference(state, x_t, dt_t, A, B_t, C_t)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Implements the chunked block decomposition of Mamba2 (arXiv:2405.21060 §6):
+within-chunk quadratic term + inter-chunk recurrence on the (H, hd, N) state.
+This is the reference the Pallas kernel is validated against, the non-TPU
+execution path, and the dry-run HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k], lower-tri."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_reference(
+    x: jnp.ndarray,     # (B, S, H, P)   inputs (already multiplied by nothing; dt applied inside)
+    dt: jnp.ndarray,    # (B, S, H)      softplus-activated step sizes
+    A: jnp.ndarray,     # (H,)           negative decay rates (A = -exp(A_log))
+    B_: jnp.ndarray,    # (B, S, G, N)
+    C_: jnp.ndarray,    # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    return_final_state: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """y[t] = C[t] · h[t],  h[t] = exp(dt[t]·A)·h[t-1] + dt[t]·B[t]⊗x[t].
+
+    Group dim G broadcasts over heads (H % G == 0).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    x_ = x.astype(f32).reshape(Bb, nc, chunk, H, P)
+    dt_ = dt.astype(f32).reshape(Bb, nc, chunk, H)
+    Bc = jnp.repeat(B_.astype(f32), rep, axis=2).reshape(Bb, nc, chunk, H, N)
+    Cc = jnp.repeat(C_.astype(f32), rep, axis=2).reshape(Bb, nc, chunk, H, N)
+
+    dA = dt_ * A.astype(f32)[None, None, None, :]          # (B, nc, c, H)
+    dA = jnp.moveaxis(dA, -1, 2)                            # (B, nc, H, c)
+    dA_cum = jnp.cumsum(dA, axis=-1)                        # within-chunk cumsum
+
+    # 1) within-chunk (quadratic) term: Y_diag = (C B^T ∘ L) · (dt·x)
+    L = jnp.exp(segsum(dA))                                 # (B, nc, H, c, c)
+    CB = jnp.einsum("bnchj,bnshj->bnhcs", Cc, Bc)           # (B, nc, H, c, c)
+    dtx = x_ * dt_[..., None]                                # (B, nc, c, H, P)
+    y_diag = jnp.einsum("bnhcs,bnshp->bnchp", CB * L, dtx)
+
+    # 2) per-chunk final states: decay each position to chunk end
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum)       # (B, nc, H, c)
+    states = jnp.einsum("bnhc,bnchm,bnchp->bnhpm",
+                        decay_to_end, Bc, dtx)               # (B, nc, H, P, N)
+
+    # 3) inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                  # (B, nc, H)
+    h0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((Bb, H, P, N), f32)
+    )
+
+    def step(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    states_t = jnp.moveaxis(states, 1, 0)                   # (nc, B, H, P, N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)               # (nc, B, H)
+    h_final, h_prior = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_prior = jnp.moveaxis(h_prior, 0, 1)                   # (B, nc, H, P, N): state entering chunk
+
+    # 4) inter-chunk output: decayed prior state read out by C
+    state_decay = jnp.exp(dA_cum)                           # (B, nc, H, c)
+    y_off = jnp.einsum("bnchm,bnhpm,bnhc->bnchp", Cc, h_prior, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P).astype(x.dtype)
+    return (y, h_final) if return_final_state else (y, None)
+
+
+def ssd_decode_reference(
+    state: jnp.ndarray,  # (B, H, P, N)
+    x_t: jnp.ndarray,    # (B, H, P)
+    dt_t: jnp.ndarray,   # (B, H)
+    A: jnp.ndarray,      # (H,)
+    B_t: jnp.ndarray,    # (B, G, N)
+    C_t: jnp.ndarray,    # (B, G, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence: O(1) in sequence length."""
+    Bb, H, P, N = state.shape
+    G = B_t.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_t.astype(f32), rep, axis=1)   # (B, H, N)
+    Ch = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    dA = jnp.exp(dt_t.astype(f32) * A.astype(f32)[None, :])      # (B, H)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt_t.astype(f32), Bh, x_t.astype(f32))
+    new_state = state.astype(f32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state.astype(state.dtype)

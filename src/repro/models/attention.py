@@ -1,0 +1,147 @@
+"""GQA attention blocks: init + train/prefill/decode/cross application.
+
+All flavors funnel into kernels.flash_attention.ops (Pallas on TPU, jnp ref
+elsewhere). Decode writes k/v into a caller-owned cache at position ``pos``
+and attends over entries <= pos.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.flash_attention import ops as attn_ops
+from ..sharding import partition
+from . import layers
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    """Weights for one attention block. cross=True adds no rope and is
+    initialized identically (separate weights for whisper cross-attn)."""
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = layers.dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": layers.dense_init(k1, (D, H, hd), D, dt),
+        "wk": layers.dense_init(k2, (D, KV, hd), D, dt),
+        "wv": layers.dense_init(k3, (D, KV, hd), D, dt),
+        "wo": layers.dense_init(k4, (H, hd, D), H * hd, dt),
+    }
+    specs = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qkv_bias:
+        params.update(
+            bq=jnp.zeros((H, hd), dt), bk=jnp.zeros((KV, hd), dt), bv=jnp.zeros((KV, hd), dt)
+        )
+        specs.update(bq=("heads", None), bk=("kv_heads", None), bv=("kv_heads", None))
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), jnp.float32)
+        params["k_norm"] = jnp.ones((hd,), jnp.float32)
+        specs["q_norm"] = (None,)
+        specs["k_norm"] = (None,)
+    return params, specs
+
+
+def _headwise_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _qkv(p, x, cfg: ModelConfig, positions: Optional[jnp.ndarray], rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = _headwise_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = _headwise_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(
+    p,
+    x: jnp.ndarray,                       # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    return_kv: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    rope = cfg.rope_theta > 0
+    q, k, v = _qkv(p, x, cfg, positions, rope)
+    # context-parallel fallback: when heads don't divide the model axis, the
+    # head compute replicates; sharding q's SEQUENCE over `model` instead
+    # recovers 1/model of the attention flops (k/v are gathered — O(S·d)
+    # traffic vs the O(S^2) compute win)
+    q_seq = "seq_shard" if cfg.attn_seq_shard else "seq"
+    q = partition.shard_act(q, "batch", q_seq, "heads", None)
+    k = partition.shard_act(k, "batch", "seq", "kv_heads", None)
+    v = partition.shard_act(v, "batch", "seq", "kv_heads", None)
+    o = attn_ops.flash_attention(q, k, v, causal=causal)
+    if cfg.attn_seq_shard:
+        o = partition.shard_act(o, "batch", "seq_shard", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return (out, (k, v)) if return_kv else (out, None)
+
+
+def self_attention_decode(
+    p,
+    x: jnp.ndarray,                       # (B, 1, D)
+    k_cache: jnp.ndarray,                 # (B, S, KV, hd)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,                     # scalar or (B,) int32: write position
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    rope = cfg.rope_theta > 0
+    vec = pos.ndim == 1
+    positions = (pos[:, None] if vec else pos[None]) if rope else None
+    q, k, v = _qkv(p, x, cfg, positions, rope)
+    if vec:  # per-sequence positions (continuous batching)
+        rows = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1
+        )
+    o = attn_ops.decode_attention(q, k_cache, v_cache, pos)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k_cache, v_cache)
+
+
+def cross_attention(
+    p,
+    x: jnp.ndarray,                       # (B, Sq, D) decoder states
+    kv_source: Optional[jnp.ndarray] = None,   # (B, Skv, D) encoder output
+    kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cfg: ModelConfig = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Whisper-style cross attention. Pass kv_source at prefill/train (k, v
+    computed and returned for caching); pass kv_cache at decode."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg is not None and cfg.qkv_bias:
+        q = q + p["bq"]
+    if kv_cache is not None:
+        k, v = kv_cache
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", kv_source, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_source, p["wv"])
+        if cfg is not None and cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+    o = attn_ops.flash_attention(q, k, v, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k, v)

@@ -1,0 +1,152 @@
+"""Shared model primitives: norms, RoPE, positional encodings, MLPs, embeddings.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the param
+pytree with tuples of *logical* axis names (resolved against the mesh by
+``sharding.partition``). Compute follows the usual mixed-precision recipe:
+bf16 weights/activations, fp32 norms/softmax/rope.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+Params = dict
+Specs = dict
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, fan_in: int, dtype) -> jnp.ndarray:
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- norms ---------------------------------------------------------------
+def init_rmsnorm(d: int) -> Tuple[Params, Specs]:
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(x: jnp.ndarray, p: Params, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Tuple[Params, Specs]:
+    return (
+        {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm(x: jnp.ndarray, p: Params, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# -- rotary / sinusoidal positions ------------------------------------------
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (S,) or (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed absolute positional embedding (n, d)."""
+    half = d // 2
+    log_timescale = jnp.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(n, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+# -- MLPs -------------------------------------------------------------------
+def init_swiglu(key, d: int, f: int, dtype) -> Tuple[Params, Specs]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi": dense_init(k1, (d, f), d, dtype),
+        "wg": dense_init(k2, (d, f), d, dtype),
+        "wo": dense_init(k3, (f, d), f, dtype),
+    }
+    specs = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return params, specs
+
+
+def swiglu(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+def init_gelu_mlp(key, d: int, f: int, dtype) -> Tuple[Params, Specs]:
+    k1, k2 = jax.random.split(key)
+    params = {
+        "wi": dense_init(k1, (d, f), d, dtype),
+        "bi": jnp.zeros((f,), dtype),
+        "wo": dense_init(k2, (f, d), f, dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+    specs = {"wi": ("embed", "mlp"), "bi": ("mlp",), "wo": ("mlp", "embed"), "bo": ("embed",)}
+    return params, specs
+
+
+def gelu_mlp(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"]) + p["bo"]
+
+
+# -- embeddings ---------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype) -> Tuple[Params, Specs]:
+    tok = (jax.random.normal(key, (vocab, d), jnp.float32) * d ** -0.5).astype(dtype)
+    return {"tok": tok}, {"tok": ("vocab", "embed")}
+
+
+def embed(tokens: jnp.ndarray, p: Params) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def init_unembed(key, vocab: int, d: int, dtype) -> Tuple[Params, Specs]:
+    w = dense_init(key, (d, vocab), d, dtype)
+    return {"w": w}, {"w": ("embed", "vocab")}
+
+
+def logits_from(h: jnp.ndarray, unembed_p: Optional[Params], embed_p: Params) -> jnp.ndarray:
+    """fp32 logits; tied embeddings when no separate unembed is present."""
+    if unembed_p is not None:
+        return jnp.einsum("...d,dv->...v", h, unembed_p["w"]).astype(jnp.float32)
+    return jnp.einsum("...d,vd->...v", h, embed_p["tok"]).astype(jnp.float32)
+
+
+def cross_entropy_loss(
+    logits: jnp.ndarray,        # (B, S, V) fp32
+    targets: jnp.ndarray,       # (B, S) int32
+    mask: Optional[jnp.ndarray] = None,  # (B, S) 1.0 where counted
+) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom

@@ -1,0 +1,138 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Prefill expands the compressed latent into per-head k/v; decode runs the
+*absorbed* form: queries are projected into latent space and attention runs
+as MQA with a single (kv_lora + rope)-wide kv head — the cache stores only
+(c_kv, k_rope) per token, the technique's memory advantage.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.flash_attention import ops as attn_ops
+from ..sharding import partition
+from . import layers
+
+
+def init_mla(key, cfg: ModelConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    params = {
+        "wdq": layers.dense_init(ks[0], (D, m.q_lora_rank), D, dt),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wuq": layers.dense_init(ks[1], (m.q_lora_rank, H, qk), m.q_lora_rank, dt),
+        "wdkv": layers.dense_init(ks[2], (D, m.kv_lora_rank), D, dt),
+        "wkr": layers.dense_init(ks[3], (D, m.qk_rope_dim), D, dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wuk": layers.dense_init(ks[4], (m.kv_lora_rank, H, m.qk_nope_dim), m.kv_lora_rank, dt),
+        "wuv": layers.dense_init(ks[5], (m.kv_lora_rank, H, m.v_head_dim), m.kv_lora_rank, dt),
+        "wo": layers.dense_init(ks[6], (H, m.v_head_dim, D), H * m.v_head_dim, dt),
+    }
+    specs = {
+        "wdq": ("embed", "latent"),
+        "q_norm": (None,),
+        "wuq": ("latent", "heads", None),
+        "wdkv": ("embed", "latent"),
+        "wkr": ("embed", None),
+        "kv_norm": (None,),
+        "wuk": ("latent", "heads", None),
+        "wuv": ("latent", "heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    return params, specs
+
+
+def _norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _queries(p, x, cfg, positions):
+    m = cfg.mla
+    ql = _norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wuq"])
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    if positions is not None:
+        q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, x, cfg, positions):
+    m = cfg.mla
+    c_kv = _norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
+    if positions is not None:
+        k_rope = layers.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p,
+    x: jnp.ndarray,                        # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    return_cache: bool = False,
+):
+    """Prefill/train path: expand latent to per-head k/v, causal attention."""
+    m = cfg.mla
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latent_kv(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"])
+    H = cfg.n_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], H, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_seq = "seq_shard" if cfg.attn_seq_shard else "seq"
+    q = partition.shard_act(q, "batch", q_seq, "heads", None)
+    o = attn_ops.flash_attention(q, k, v, causal=True, scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5)
+    if cfg.attn_seq_shard:
+        o = partition.shard_act(o, "batch", "seq_shard", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return (out, (c_kv, k_rope)) if return_cache else (out, None)
+
+
+def mla_attention_decode(
+    p,
+    x: jnp.ndarray,                       # (B, 1, D)
+    ckv_cache: jnp.ndarray,               # (B, S, kv_lora)
+    krope_cache: jnp.ndarray,             # (B, S, rope_dim)
+    pos: jnp.ndarray,
+    cfg: ModelConfig,
+):
+    """Absorbed decode: MQA over the compressed cache."""
+    m = cfg.mla
+    vec = pos.ndim == 1
+    positions = pos[:, None] if vec else pos[None]
+    q_nope, q_rope = _queries(p, x, cfg, positions=positions)
+    c_kv, k_rope = _latent_kv(p, x, cfg, positions=positions)
+    if vec:
+        rows = jnp.arange(ckv_cache.shape[0])
+        ckv_cache = ckv_cache.at[rows, pos].set(c_kv[:, 0].astype(ckv_cache.dtype))
+        krope_cache = krope_cache.at[rows, pos].set(k_rope[:, 0].astype(krope_cache.dtype))
+    else:
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            ckv_cache, c_kv.astype(ckv_cache.dtype), pos, axis=1
+        )
+        krope_cache = jax.lax.dynamic_update_slice_in_dim(
+            krope_cache, k_rope.astype(krope_cache.dtype), pos, axis=1
+        )
+    # absorb W_uk into the query: q_lat (B, 1, H, kv_lora)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"])
+    q_full = jnp.concatenate([q_lat, q_rope], axis=-1)              # (B,1,H,lora+rope)
+    k_full = jnp.concatenate([ckv_cache, krope_cache], axis=-1)[:, :, None, :]  # (B,S,1,·)
+    v_lat = ckv_cache[:, :, None, :]                                 # (B,S,1,lora)
+    o_lat = attn_ops.decode_attention(
+        q_full, k_full, v_lat, pos, scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    )                                                                # (B,1,H,lora)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["wuv"])                # absorb W_uv
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (ckv_cache, krope_cache)

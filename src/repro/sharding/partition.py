@@ -1,0 +1,159 @@
+"""Logical-axis partitioning (DP/FSDP x TP/EP/SP) with divisibility fallback.
+
+Models annotate params/activations with *logical* axis names; this module
+resolves them against the active mesh:
+
+    "batch"   -> ("pod", "data")      (data parallel; pod axis folds in)
+    "embed"   -> "data"               (FSDP: parameters 2D-sharded)
+    "heads" / "kv_heads" / "mlp" / "vocab" / "experts" / "ssm_heads" -> "model"
+    "seq"     -> "model" (sequence parallelism / seq-sharded KV) when requested
+
+Resolution is greedy left-to-right per tensor: a mesh axis is used at most
+once per spec, and a dim only shards if the mesh axis size divides it —
+otherwise the dim replicates (e.g. 14 heads on a 16-way model axis, or 60
+experts -> TP-MoE fallback). This single rule set generates every per-arch
+sharding in the assignment without hand-written special cases.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> candidate mesh axes, in preference order. Each candidate is
+# an axis name or tuple of axis names (joint sharding).
+DEFAULT_RULES: dict = {
+    "batch": (("pod", "data"), "data"),
+    # params FSDP-shard over the pod axis too (multi-pod ZeRO: optimizer
+    # state halves at 512 chips — without this the pod axis only replicates)
+    "embed": (("pod", "data"), "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "state": (),
+    "seq_shard": ("model",),   # sequence parallelism / seq-sharded KV cache
+    "seq": (),                 # unsharded sequence
+    "layers": (),
+    "capacity": (("pod", "data"), "data"),
+    None: (),
+}
+
+
+@dataclass
+class MeshContext:
+    mesh: Optional[Mesh]
+    rules: dict
+
+    def axis_size(self, axis) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape.get(a, 0) or 0
+                if a not in self.mesh.shape:
+                    return 0
+            return n
+        return self.mesh.shape.get(axis, 0)
+
+
+_ctx = threading.local()
+
+
+def current() -> Optional[MeshContext]:
+    return getattr(_ctx, "ctx", None)
+
+
+def rules_for(cfg=None) -> dict:
+    """Rule set for a model config. pure_dp widens the batch rule to consume
+    both mesh axes (ZeRO-3: no tensor parallelism, per-layer param gathers)."""
+    rules = dict(DEFAULT_RULES)
+    if cfg is not None and getattr(cfg, "pure_dp", False):
+        wide = (("pod", "data", "model"), ("data", "model"), ("pod", "data"), "data")
+        rules["batch"] = wide
+        rules["capacity"] = wide
+    return rules
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh for logical-axis resolution AND jax sharding context."""
+    prev = getattr(_ctx, "ctx", None)
+    _ctx.ctx = MeshContext(mesh=mesh, rules=dict(rules or DEFAULT_RULES))
+    try:
+        if mesh is not None:
+            with mesh:
+                yield _ctx.ctx
+        else:
+            yield _ctx.ctx
+    finally:
+        _ctx.ctx = prev
+
+
+def resolve_spec(
+    logical: Sequence, shape: Optional[Sequence[int]] = None, ctx: Optional[MeshContext] = None
+) -> P:
+    """Logical names -> PartitionSpec with greedy axis assignment +
+    divisibility fallback. `shape` enables the divisibility check; without it
+    the first present candidate axis is used unconditionally."""
+    ctx = ctx or current()
+    if ctx is None or ctx.mesh is None:
+        return P()
+    used: set = set()
+    out = []
+    for d, name in enumerate(logical):
+        assigned = None
+        for cand in ctx.rules.get(name, ()):  # preference order
+            axes = cand if isinstance(cand, tuple) else (cand,)
+            if any(a not in ctx.mesh.shape for a in axes):
+                continue
+            if any(a in used for a in axes):
+                continue
+            size = ctx.axis_size(cand)
+            if size <= 1:
+                continue
+            if shape is not None and shape[d] % size != 0:
+                continue
+            assigned = cand
+            used.update(axes)
+            break
+        out.append(assigned)
+    # trim trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard_act(x: Any, *logical, ctx: Optional[MeshContext] = None) -> Any:
+    """with_sharding_constraint on an activation via logical names. No-op
+    when no mesh context is active (single-device tests/benches)."""
+    ctx = ctx or current()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = resolve_spec(logical, shape=getattr(x, "shape", None), ctx=ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def resolve_tree_specs(logical_tree: Any, aval_tree: Any, ctx: Optional[MeshContext] = None) -> Any:
+    """Map a pytree of logical-axis tuples + matching pytree of avals ->
+    pytree of PartitionSpec."""
+    ctx = ctx or current()
+
+    def one(logical, aval):
+        return resolve_spec(tuple(logical), shape=aval.shape, ctx=ctx)
+
+    return jax.tree.map(one, logical_tree, aval_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def named_shardings(logical_tree: Any, aval_tree: Any, mesh: Mesh, rules: Optional[dict] = None) -> Any:
+    ctx = MeshContext(mesh=mesh, rules=dict(rules or DEFAULT_RULES))
+    specs = resolve_tree_specs(logical_tree, aval_tree, ctx=ctx)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,142 @@
+"""AdamW with fp32 master weights + moments, fully sharded (ZeRO-3-like:
+optimizer state inherits the 2D FSDPxTP param sharding), global-norm clip,
+warmup+cosine schedule, and bf16 gradient reduction ("compression": the
+cross-data-axis reduce runs at half the bytes of an fp32 baseline; an
+optional stochastic-rounding cast guards the master update).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_dtype: str = "bfloat16"       # reduction precision ("compression")
+    moments_dtype: str = "float32"     # bf16 moments halve optimizer-state HBM
+    stochastic_rounding: bool = False  # SR when casting update back to bf16
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    floor = cfg.min_lr_ratio
+    return cfg.lr * warm * (floor + (1 - floor) * cos)
+
+
+def init_state(params, cfg: "OptimizerConfig" = None) -> Dict[str, Any]:
+    # force a fresh buffer: for fp32 params .astype is a no-op alias, and an
+    # aliased master would be double-donated by train_step's donate_argnums
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    mdt = jnp.dtype(cfg.moments_dtype) if cfg is not None else jnp.float32
+    return {
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(param_specs) -> Dict[str, Any]:
+    """Optimizer-state logical specs mirror the params'."""
+    is_leaf = lambda x: isinstance(x, tuple)
+    same = lambda tree: jax.tree.map(lambda s: s, tree, is_leaf=is_leaf)
+    return {
+        "master": same(param_specs),
+        "mu": same(param_specs),
+        "nu": same(param_specs),
+        "step": (),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _sr_cast(x: jnp.ndarray, dtype, key) -> jnp.ndarray:
+    """Stochastic rounding to `dtype` (guards repeated-cast bias)."""
+    if x.dtype == dtype:
+        return x
+    down = x.astype(dtype)
+    up = jnp.nextafter(down.astype(jnp.float32), jnp.inf).astype(dtype)
+    span = (up.astype(jnp.float32) - down.astype(jnp.float32))
+    frac = jnp.where(span > 0, (x - down.astype(jnp.float32)) / jnp.where(span > 0, span, 1), 0)
+    u = jax.random.uniform(key, x.shape)
+    return jnp.where(u < frac, up, down)
+
+
+def apply_updates(
+    grads,
+    state: Dict[str, Any],
+    cfg: OptimizerConfig,
+    param_dtypes,
+    sr_key: Optional[jnp.ndarray] = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new compute-dtype params, new state)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(g, m, v, w):
+        # fp32 cast + clip PER LEAF: a tree-wide cast would materialize a
+        # full fp32 gradient copy and set the whole step's memory peak
+        # (3.7 GiB/device on the 235B MoE cell — see EXPERIMENTS.md §Perf)
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w)
+        return m32.astype(mdt), v32.astype(mdt), w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    flat_w = jax.tree.leaves(state["master"])
+    out_m, out_v, out_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        out_m.append(m2)
+        out_v.append(v2)
+        out_w.append(w2)
+
+    new_state = {
+        "master": jax.tree.unflatten(treedef, out_w),
+        "mu": jax.tree.unflatten(treedef, out_m),
+        "nu": jax.tree.unflatten(treedef, out_v),
+        "step": step,
+    }
+
+    dtypes = jax.tree.leaves(param_dtypes)
+    if cfg.stochastic_rounding and sr_key is not None:
+        keys = jax.random.split(sr_key, len(out_w))
+        new_params = [
+            _sr_cast(w, dt, k) for w, dt, k in zip(out_w, dtypes, keys)
+        ]
+    else:
+        new_params = [w.astype(dt) for w, dt in zip(out_w, dtypes)]
+    return jax.tree.unflatten(treedef, new_params), new_state

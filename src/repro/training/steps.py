@@ -1,0 +1,222 @@
+"""Step builders: the registered "functions" of serverless supercomputing.
+
+``build_train_step`` / ``build_prefill_step`` / ``build_decode_step`` produce
+jittable callables plus their in/out shardings resolved from logical axis
+specs — exactly what the dry-run lowers and what the FaaS endpoint registers
+and dispatches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeSpec
+from ..models.model import Model
+from ..sharding import partition
+from . import optimizer as opt
+
+
+def batch_avals(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell (no
+    allocation — the multi-pod dry-run contract)."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            return {
+                "tokens": f((B, S - cfg.n_patches), jnp.int32),
+                "patches": f((B, cfg.n_patches, cfg.d_model), dt),
+            }
+        if cfg.family == "encdec":
+            return {
+                "tokens": f((B, S), jnp.int32),
+                "frames": f((B, cfg.enc_seq, cfg.d_model), dt),
+            }
+        return {"tokens": f((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        return {"token": f((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def batch_logical_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, tuple]:
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": ("batch", "seq")}
+        if cfg.family == "vlm":
+            out["patches"] = ("batch", "seq", None)
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", "seq", None)
+        return out
+    return {"token": ("batch", None)}
+
+
+@dataclass
+class BuiltStep:
+    fn: Any                    # callable(params/state..., batch...) -> outputs
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple
+    abstract_args: tuple       # avals for .lower()
+
+
+def _shardings(logical_tree, aval_tree, mesh: Mesh, rules=None):
+    return partition.named_shardings(logical_tree, aval_tree, mesh, rules=rules)
+
+
+def build_train_step(
+    model: Model,
+    ocfg: opt.OptimizerConfig,
+    mesh: Optional[Mesh] = None,
+    shape: Optional[ShapeSpec] = None,
+) -> BuiltStep:
+    cfg = model.cfg
+    M = max(cfg.microbatches, 1)
+
+    grad_shardings = None
+    if mesh is not None:
+        rules = partition.rules_for(cfg)
+        p_specs = model.specs()
+        p_avals = model.abstract_params()
+        param_sh = _shardings(p_specs, p_avals, mesh, rules)
+        grad_shardings = param_sh
+
+    def _grads(params, batch):
+        """value_and_grad (+ optional microbatch accumulation). Grads are cast
+        to grad_dtype and pinned to the param sharding IMMEDIATELY — without
+        the constraint XLA all-reduces fp32 wgrads and slices afterwards
+        (measured: 2x the bytes on every train cell; see EXPERIMENTS.md)."""
+        gdt = jnp.dtype(ocfg.grad_dtype)
+
+        def one(params, mb):
+            (loss, metrics), g = jax.value_and_grad(model.loss, has_aux=True)(params, mb)
+            g = jax.tree.map(lambda x: x.astype(gdt), g)
+            if grad_shardings is not None:
+                g = jax.tree.map(jax.lax.with_sharding_constraint, g, grad_shardings)
+            return loss, metrics, g
+
+        if M == 1:
+            return one(params, batch)
+
+        split = jax.tree.map(lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+        if grad_shardings is not None:
+            g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0, grad_shardings)
+
+        def body(carry, mb):
+            gacc, lacc, ceacc, auxacc = carry
+            loss, metrics, g = one(params, mb)
+            gacc = jax.tree.map(lambda a, b: a + b, gacc, g)
+            return (gacc, lacc + loss, ceacc + metrics["ce"], auxacc + metrics["aux"]), None
+
+        (g, lsum, cesum, auxsum), _ = jax.lax.scan(
+            body, (g0, jnp.float32(0), jnp.float32(0), jnp.float32(0)), split
+        )
+        g = jax.tree.map(lambda x: (x / M).astype(gdt), g)
+        metrics = {"loss": lsum / M, "ce": cesum / M, "aux": auxsum / M}
+        return lsum / M, metrics, g
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = _grads(params, batch)
+        param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+        new_params, new_state = opt.apply_updates(grads, opt_state, ocfg, param_dtypes)
+        metrics = dict(metrics, grad_norm=opt.global_norm(grads),
+                       lr=opt.schedule(ocfg, new_state["step"]))
+        return new_params, new_state, metrics
+
+    if mesh is None:
+        return BuiltStep(train_step, None, None, (0, 1), ())
+
+    s_specs = opt.state_specs(p_specs)
+    s_avals = jax.eval_shape(lambda p: opt.init_state(p, ocfg), p_avals)
+    b_avals = batch_avals(cfg, shape)
+    b_specs = batch_logical_specs(cfg, shape)
+
+    in_sh = (
+        param_sh,
+        _shardings(s_specs, s_avals, mesh, rules),
+        _shardings(b_specs, b_avals, mesh, rules),
+    )
+    metric_sh = NamedSharding(mesh, P())
+    out_sh = (in_sh[0], in_sh[1], jax.tree.map(lambda _: metric_sh,
+              {"ce": 0, "aux": 0, "loss": 0, "grad_norm": 0, "lr": 0}))
+    return BuiltStep(train_step, in_sh, out_sh, (0, 1), (p_avals, s_avals, b_avals))
+
+
+def build_prefill_step(model: Model, mesh: Optional[Mesh] = None,
+                       shape: Optional[ShapeSpec] = None) -> BuiltStep:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    if mesh is None:
+        return BuiltStep(prefill_step, None, None, (), ())
+
+    rules = partition.rules_for(cfg)
+    p_specs = model.specs()
+    p_avals = model.abstract_params()
+    b_avals = batch_avals(cfg, shape)
+    b_specs = batch_logical_specs(cfg, shape)
+    in_sh = (_shardings(p_specs, p_avals, mesh, rules),
+             _shardings(b_specs, b_avals, mesh, rules))
+
+    cache_avals, cache_specs = _cache_avals_specs(model, shape, mesh)
+    B = shape.global_batch
+    tok_aval = jax.ShapeDtypeStruct((B,), jnp.int32)
+    next_tok_sh = _shardings({"t": ("batch",)}, {"t": tok_aval}, mesh, rules)["t"]
+    logits_aval = jax.ShapeDtypeStruct((B, cfg.vocab), jnp.float32)
+    logits_sh = _shardings({"l": ("batch", "vocab")}, {"l": logits_aval}, mesh, rules)["l"]
+    out_sh = (
+        next_tok_sh,
+        logits_sh,
+        _shardings(cache_specs, cache_avals, mesh, rules),
+    )
+    return BuiltStep(prefill_step, in_sh, out_sh, (), (p_avals, b_avals))
+
+
+def _cache_avals_specs(model: Model, shape: ShapeSpec, mesh: Mesh):
+    captured = {}
+
+    def f():
+        c, s = model.init_cache(shape.global_batch, shape.seq_len)
+        captured["s"] = s
+        return c
+
+    with partition.use_mesh(mesh, rules=partition.rules_for(model.cfg)):
+        avals = jax.eval_shape(f)
+    return avals, captured["s"]
+
+
+def build_decode_step(model: Model, mesh: Optional[Mesh] = None,
+                      shape: Optional[ShapeSpec] = None) -> BuiltStep:
+    cfg = model.cfg
+
+    def decode_step(params, token, cache, pos):
+        logits, new_cache = model.decode_step(params, token, cache, pos)
+        next_token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_token, new_cache
+
+    if mesh is None:
+        return BuiltStep(decode_step, None, None, (2,), ())
+
+    rules = partition.rules_for(cfg)
+    p_specs = model.specs()
+    p_avals = model.abstract_params()
+    b_avals = batch_avals(cfg, shape)
+    cache_avals, cache_specs = _cache_avals_specs(model, shape, mesh)
+    tok_sh = _shardings(batch_logical_specs(cfg, shape), b_avals, mesh, rules)["token"]
+    cache_sh = _shardings(cache_specs, cache_avals, mesh, rules)
+    in_sh = (_shardings(p_specs, p_avals, mesh), tok_sh, cache_sh, NamedSharding(mesh, P()))
+    out_sh = (tok_sh, cache_sh)
+    pos_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    return BuiltStep(
+        decode_step, in_sh, out_sh, (2,),
+        (p_avals, b_avals["token"], cache_avals, pos_aval),
+    )

@@ -1,0 +1,123 @@
+"""Training driver: steps are FaaS functions ("serverless supercomputing").
+
+The trainer registers ``train_step`` on a funcJAX endpoint and submits each
+step as a function invocation — warm executable cache makes step 2+ cheap,
+the endpoint watchdog re-executes steps lost to executor failure, and the
+checkpointer bounds lost work on controller failure. This is the paper's
+model applied to training: the "function" happens to span a pod.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..core.service import FunctionService
+from ..data.pipeline import Prefetcher, token_stream
+from ..models.model import Model
+from . import optimizer as opt
+from .steps import build_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    prefetch_depth: int = 2
+    log_every: int = 10
+    resume: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        ocfg: opt.OptimizerConfig,
+        tcfg: TrainConfig,
+        service: Optional[FunctionService] = None,
+        endpoint_id: Optional[str] = None,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.ocfg = ocfg
+        self.tcfg = tcfg
+        self.service = service
+        self.endpoint_id = endpoint_id
+        self.history: List[Dict[str, float]] = []
+
+        built = build_train_step(model, ocfg)
+        self._step_fn = jax.jit(built.fn, donate_argnums=built.donate_argnums)
+
+        key = jax.random.PRNGKey(seed)
+        self.params = model.init(key)
+        self.opt_state = opt.init_state(self.params, ocfg)
+        self.step = 0
+
+        self.ckpt = Checkpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        if self.ckpt and tcfg.resume and self.ckpt.latest_step() is not None:
+            self.step, state = self.ckpt.restore(
+                {"params": self.params, "opt": self.opt_state}
+            )
+            self.params, self.opt_state = state["params"], state["opt"]
+
+        self._fid = None
+        if service is not None:
+            # pass_through + unserialized results: device arrays never hit the
+            # wire; the FaaS layer provides routing, warming, retry, telemetry.
+            def train_step_function(doc):
+                return self._step_fn(doc["params"], doc["opt"], doc["batch"])
+
+            self._fid = service.register_function(
+                train_step_function,
+                name=f"train_step/{model.cfg.name}",
+                pass_through=True,
+                serialize_result=False,
+                static=repr((model.cfg, ocfg)),
+            )
+
+    def _run_one(self, batch) -> Dict[str, float]:
+        doc = {"params": self.params, "opt": self.opt_state, "batch": batch}
+        if self.service is not None:
+            fut = self.service.run(self._fid, doc, endpoint_id=self.endpoint_id,
+                                   max_retries=2)
+            self.params, self.opt_state, metrics = fut.result(timeout=600)
+        else:
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, doc["batch"]
+            )
+        return {k: float(v) for k, v in metrics.items()}
+
+    def run(self) -> List[Dict[str, float]]:
+        cfg, t = self.model.cfg, self.tcfg
+        stream = token_stream(cfg, t.batch, t.seq, start_step=self.step)
+        pf = Prefetcher(stream, depth=t.prefetch_depth)
+        t0 = time.monotonic()
+        try:
+            while self.step < t.steps:
+                batch = next(pf)
+                metrics = self._run_one(batch)
+                self.step += 1
+                metrics["step"] = self.step
+                metrics["wall_s"] = time.monotonic() - t0
+                self.history.append(metrics)
+                if t.log_every and self.step % t.log_every == 0:
+                    print(
+                        f"step {self.step:5d} loss {metrics['loss']:.4f} "
+                        f"grad_norm {metrics['grad_norm']:.3f} lr {metrics['lr']:.2e}",
+                        flush=True,
+                    )
+                if self.ckpt and self.step % t.ckpt_every == 0:
+                    self.ckpt.save(self.step, {"params": self.params, "opt": self.opt_state})
+        finally:
+            pf.close()
+            if self.ckpt:
+                self.ckpt.save(self.step, {"params": self.params, "opt": self.opt_state},
+                               blocking=True)
+        return self.history

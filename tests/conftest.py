@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B, S, seed=0, dtype=np.float32):
+    """Family-correct synthetic batch for a reduced config."""
+    r = np.random.default_rng(seed)
+    if cfg.family == "vlm":
+        return {
+            "tokens": r.integers(0, cfg.vocab, (B, S - cfg.n_patches)).astype(np.int32),
+            "patches": r.standard_normal((B, cfg.n_patches, cfg.d_model)).astype(dtype),
+        }
+    batch = {"tokens": r.integers(0, cfg.vocab, (B, S)).astype(np.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = r.standard_normal((B, cfg.enc_seq, cfg.d_model)).astype(dtype)
+    return batch

@@ -1,0 +1,260 @@
+"""Unit + property tests for core FaaS components."""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FunctionRegistry,
+    HeartbeatMonitor,
+    MemoCache,
+    Scheduler,
+    TaskEnvelope,
+    WarmPool,
+    hash_function,
+    packb,
+    payload_hash,
+    stack_payloads,
+    unpackb,
+    unstack_results,
+)
+from repro.core.batching import group_by_function
+from repro.core.heartbeat import LatencyTracker
+
+
+# ---------------------------------------------------------------- registry
+def test_hash_function_stable_and_content_sensitive():
+    def f(x):
+        return x + 1
+
+    def g(x):
+        return x + 2
+
+    assert hash_function(f) == hash_function(f)
+    assert hash_function(f) != hash_function(g)
+    assert hash_function(f, static="a") != hash_function(f, static="b")
+
+
+def test_hash_function_closure_sensitivity():
+    def make(k):
+        def h(x):
+            return x + k
+
+        return h
+
+    assert hash_function(make(1)) != hash_function(make(2))
+
+
+def test_registry_idempotent_and_lookup():
+    reg = FunctionRegistry()
+    f = lambda d: d  # noqa: E731
+    fid1 = reg.register(f, name="id")
+    fid2 = reg.register(f, name="id")
+    assert fid1 == fid2
+    assert reg.get(fid1).name == "id"
+    with pytest.raises(KeyError):
+        reg.get("nope")
+
+
+# ---------------------------------------------------------------- serializer
+payload_leaf = st.one_of(
+    st.integers(min_value=-(2**40), max_value=2**40),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.text(max_size=16),
+    st.booleans(),
+    st.none(),
+    st.binary(max_size=32),
+)
+payload_tree = st.recursive(
+    payload_leaf,
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.dictionaries(st.text(max_size=6), children, max_size=4),
+        st.tuples(children, children),
+    ),
+    max_leaves=12,
+)
+
+
+@given(payload_tree)
+@settings(max_examples=80, deadline=None)
+def test_serializer_roundtrip_property(tree):
+    out = unpackb(packb(tree))
+
+    def norm(x):
+        if isinstance(x, tuple):
+            return [norm(v) for v in x]
+        if isinstance(x, list):
+            return [norm(v) for v in x]
+        if isinstance(x, dict):
+            return {k: norm(v) for k, v in x.items()}
+        return x
+
+    assert norm(out) == norm(tree)
+
+
+@given(payload_tree)
+@settings(max_examples=50, deadline=None)
+def test_payload_hash_deterministic(tree):
+    assert payload_hash(tree) == payload_hash(tree)
+
+
+def test_serializer_ndarray_roundtrip():
+    for dt in (np.float32, np.int64, np.bool_, np.float16, np.uint8):
+        arr = (np.arange(24).reshape(2, 3, 4) % 2).astype(dt)
+        out = unpackb(packb({"a": arr}))["a"]
+        np.testing.assert_array_equal(out, arr)
+        assert out.dtype == arr.dtype
+
+
+def test_payload_hash_dict_order_invariant():
+    a = {"x": 1, "y": np.ones(3)}
+    b = {"y": np.ones(3), "x": 1}
+    assert payload_hash(a) == payload_hash(b)
+
+
+# ---------------------------------------------------------------- memoization
+def test_memo_lru_eviction_and_stats():
+    memo = MemoCache(max_entries=2)
+    memo.put("f", "a", 1)
+    memo.put("f", "b", 2)
+    memo.put("f", "c", 3)  # evicts ("f","a")
+    hit, _ = memo.get("f", "a")
+    assert not hit
+    hit, v = memo.get("f", "c")
+    assert hit and v == 3
+    s = memo.stats()
+    assert s["entries"] == 2 and s["hits"] == 1 and s["misses"] == 1
+
+
+def test_memo_invalidate():
+    memo = MemoCache()
+    memo.put("f", "a", 1)
+    memo.put("g", "a", 2)
+    assert memo.invalidate("f") == 1
+    assert len(memo) == 1
+
+
+# ---------------------------------------------------------------- warming
+def test_warm_pool_hit_miss_ttl():
+    pool = WarmPool(ttl_s=0.05, max_entries=4)
+    calls = []
+
+    def compile_fn():
+        calls.append(1)
+        return lambda d: d
+
+    _, cold, _ = pool.get_or_compile(("f", "c"), compile_fn)
+    assert cold and len(calls) == 1
+    _, cold, _ = pool.get_or_compile(("f", "c"), compile_fn)
+    assert not cold and len(calls) == 1  # warm hit
+    time.sleep(0.08)
+    _, cold, _ = pool.get_or_compile(("f", "c"), compile_fn)
+    assert cold and len(calls) == 2  # TTL expired -> cold again
+    assert pool.stats()["cold_starts"] == 2
+
+
+def test_warm_pool_lru_bound():
+    pool = WarmPool(ttl_s=100, max_entries=2)
+    for i in range(4):
+        pool.get_or_compile(("f", i), lambda: i)
+    assert len(pool) == 2
+    assert pool.stats()["evictions"] == 2
+
+
+# ---------------------------------------------------------------- scheduler
+class FakeExecutor:
+    def __init__(self, eid, cap, warm=()):
+        self.executor_id = eid
+        self._cap = cap
+        self._warm = set(warm)
+
+    def accepting(self):
+        return True
+
+    def free_capacity(self):
+        return self._cap
+
+    def has_warm(self, key):
+        return key in self._warm
+
+
+def _env():
+    return TaskEnvelope(task_id="t", function_id="f", payload=b"")
+
+
+def test_scheduler_least_loaded():
+    s = Scheduler("least_loaded")
+    exs = [FakeExecutor("a", 1), FakeExecutor("b", 5)]
+    assert s.choose(exs, _env()).executor_id == "b"
+
+
+def test_scheduler_warm_affinity():
+    s = Scheduler("warm_affinity")
+    exs = [FakeExecutor("a", 9), FakeExecutor("b", 1, warm=[("f", "default")])]
+    assert s.choose(exs, _env()).executor_id == "b"
+
+
+def test_scheduler_round_robin_cycles():
+    s = Scheduler("round_robin")
+    exs = [FakeExecutor("a", 1), FakeExecutor("b", 1)]
+    picks = [s.choose(exs, _env()).executor_id for _ in range(4)]
+    assert picks == ["a", "b", "a", "b"]
+
+
+def test_scheduler_none_when_no_capacity():
+    s = Scheduler("random")
+    assert s.choose([FakeExecutor("a", 0)], _env()) is None
+
+
+# ---------------------------------------------------------------- batching
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=16))
+@settings(max_examples=40, deadline=None)
+def test_stack_unstack_no_loss_no_dup(values):
+    payloads = [{"x": np.full(3, v, np.int64), "tag": "same"} for v in values]
+    stacked = stack_payloads(payloads)
+    assert stacked["x"].shape == (len(values), 3)
+    outs = unstack_results(stacked, len(values))
+    got = [int(o["x"][0]) for o in outs]
+    assert got == values  # order preserved, nothing lost or duplicated
+
+
+def test_stack_rejects_mismatched_structure():
+    with pytest.raises(ValueError):
+        stack_payloads([{"a": np.ones(2)}, {"b": np.ones(2)}])
+    with pytest.raises(ValueError):
+        stack_payloads([{"a": np.ones(2), "t": 1}, {"a": np.ones(2), "t": 2}])
+
+
+def test_group_by_function():
+    envs = [
+        TaskEnvelope(task_id=str(i), function_id="f" if i % 2 else "g", payload=b"")
+        for i in range(6)
+    ]
+    groups = group_by_function(envs)
+    assert len(groups) == 2
+    assert sum(len(v) for v in groups.values()) == 6
+
+
+# ---------------------------------------------------------------- heartbeat
+def test_heartbeat_dead_detection():
+    mon = HeartbeatMonitor(interval_s=0.01, threshold=2.0)
+    mon.register("a")
+    mon.register("b")
+    for _ in range(3):
+        mon.beat("b")
+        time.sleep(0.01)
+    dead = mon.dead()
+    assert "a" in dead and "b" not in dead
+    mon.suspend("a")
+    assert "a" not in mon.dead()  # suspended are not re-reported
+
+
+def test_latency_tracker_p95():
+    t = LatencyTracker()
+    assert t.p95() is None
+    for v in range(100):
+        t.record(v / 100)
+    assert 0.9 <= t.p95() <= 0.99

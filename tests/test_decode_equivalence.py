@@ -1,0 +1,97 @@
+"""The serving-correctness keystone: incremental decode must reproduce the
+full-sequence forward logits (per family: GQA cache, MLA compressed cache,
+Mamba2 conv+SSM state, hybrid shared-attn cache, whisper self+cross cache)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models.model import Model
+
+B, S = 2, 24
+PREFILL = 16  # prefill length; decode the rest token by token
+
+
+def full_logits(model, params, batch):
+    h, _ = model.forward(params, batch)
+    return model._logits(params, h)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch, key):
+    cfg = get_reduced(arch).with_(dtype="float32")
+    if cfg.moe is not None:
+        # avoid capacity drops so dispatch is exact (prefill T >> decode T)
+        cfg = cfg.with_(moe=cfg.moe.__class__(**{
+            **cfg.moe.__dict__, "capacity_factor": 8.0,
+        }))
+    model = Model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, B, S)
+    ref = np.asarray(full_logits(model, params, batch))
+
+    if cfg.family == "vlm":
+        n_text = S - cfg.n_patches
+        pre_tokens = batch["tokens"][:, :PREFILL - cfg.n_patches]
+        pre_batch = dict(batch, tokens=pre_tokens)
+        decode_tokens = batch["tokens"][:, PREFILL - cfg.n_patches:]
+    else:
+        pre_batch = dict(batch, tokens=batch["tokens"][:, :PREFILL])
+        decode_tokens = batch["tokens"][:, PREFILL:]
+
+    logits_p, cache = jax.jit(model.prefill)(params, pre_batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), ref[:, PREFILL - 1], rtol=2e-4, atol=2e-4,
+        err_msg=f"{arch}: prefill last-logits mismatch",
+    )
+
+    # pad the prefill cache out to S slots so decode has room
+    if cfg.family in ("ssm",):
+        full_cache = cache  # state caches are position-free
+    else:
+        cache0, _ = model.init_cache(B, S)
+        full_cache = jax.tree.map(_blit, cache0, cache)
+
+    decode = jax.jit(model.decode_step)
+    cur = full_cache
+    n_steps = decode_tokens.shape[1] - 1
+    for i in range(n_steps):
+        tok = jnp.asarray(decode_tokens[:, i:i + 1])
+        pos = jnp.int32(PREFILL + i)
+        logits_d, cur = decode(params, tok, cur, pos)
+        np.testing.assert_allclose(
+            np.asarray(logits_d), ref[:, PREFILL + i], rtol=3e-4, atol=3e-4,
+            err_msg=f"{arch}: decode step {i} mismatch",
+        )
+
+
+def _blit(zeros_leaf, cache_leaf):
+    """Copy a prefill cache (seq len PREFILL) into a zeroed S-slot cache.
+    Sequence-length axes differ; all other axes match."""
+    if zeros_leaf.shape == cache_leaf.shape:
+        return cache_leaf.astype(zeros_leaf.dtype)
+    pads = []
+    for a, b in zip(zeros_leaf.shape, cache_leaf.shape):
+        assert a >= b, (zeros_leaf.shape, cache_leaf.shape)
+        pads.append((0, a - b))
+    return jnp.pad(cache_leaf.astype(zeros_leaf.dtype), pads)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-2.7b"])
+def test_ssm_state_is_constant_size(arch):
+    """long_500k applicability: decode state size must not grow with the
+    context length (the reason these archs run the 500k cell)."""
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    if cfg.family == "ssm":
+        c1, _ = model.init_cache(1, 128)
+        c2, _ = model.init_cache(1, 4096)
+        assert jax.tree.map(lambda x: x.shape, c1) == jax.tree.map(lambda x: x.shape, c2)
+    else:
+        c1, _ = model.init_cache(1, 128)
+        mamba_1 = jax.tree.map(lambda x: x.shape, c1["mamba"])
+        c2, _ = model.init_cache(1, 4096)
+        mamba_2 = jax.tree.map(lambda x: x.shape, c2["mamba"])
+        assert mamba_1 == mamba_2  # only the shared-attn KV grows

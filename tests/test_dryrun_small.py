@@ -1,0 +1,125 @@
+"""Dry-run machinery on a small forced-device mesh, in a subprocess (the
+XLA_FLAGS device-count override must not leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(tmp_path, *args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--results", str(tmp_path / "r.json"), *args],
+        capture_output=True, text=True, env=env, timeout=900, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    with open(tmp_path / "r.json") as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_train(tmp_path):
+    res = _run_dryrun(
+        tmp_path, "--arch", "qwen1.5-0.5b", "--shape", "train_4k", "--mesh", "2,4",
+    )
+    rec = list(res.values())[0]
+    assert rec["status"] == "ok", rec.get("error")
+    a = rec["analysis"]
+    assert a["memory"]["resident_bytes"] > 0
+    r = a["roofline"]
+    assert r["compute_s"] > 0 and r["collective_s"] >= 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < r["useful_flops_ratio"] <= 1.5
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_decode(tmp_path):
+    res = _run_dryrun(
+        tmp_path, "--arch", "qwen2-0.5b", "--shape", "decode_32k", "--mesh", "2,4",
+    )
+    rec = list(res.values())[0]
+    assert rec["status"] == "ok", rec.get("error")
+
+
+def test_collective_parser_units():
+    from repro.launch.analysis import parse_collectives
+
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[64,512]{1,0} all-gather(%y), replica_groups=[2,4]<=[8], dimensions={1}
+  %rs = f32[32]{0} reduce-scatter(%z), replica_groups={{0,1}}, dimensions={0}
+  %cp = collective-permute-start(%w), source_target_pairs={{0,1}}
+  %single = f32[8]{0} all-reduce(%q), replica_groups={{0}}, to_apply=%add
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts["all-reduce"] == 1  # single-participant one excluded
+    assert stats.counts["all-gather"] == 1
+    assert stats.counts["reduce-scatter"] == 1
+    ar_bytes = 128 * 256 * 4
+    assert stats.result_bytes["all-reduce"] == ar_bytes
+    assert stats.wire_bytes["all-reduce"] == pytest.approx(2 * ar_bytes * 3 / 4)
+    ag_bytes = 64 * 512 * 2
+    assert stats.wire_bytes["all-gather"] == pytest.approx(ag_bytes * 3 / 4)
+    rs_bytes = 32 * 4
+    assert stats.wire_bytes["reduce-scatter"] == pytest.approx(rs_bytes * 1)
+
+
+def test_model_flops_accounting():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import model_flops
+
+    cfg = get_config("deepseek-67b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    assert t == pytest.approx(6 * cfg.param_count() * 4096 * 256, rel=1e-6)
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    assert d == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+
+
+def test_cell_applicability_rules():
+    from repro.configs import SHAPES, cell_applicable, get_config
+
+    ok, _ = cell_applicable(get_config("mamba2-2.7b"), SHAPES["long_500k"])
+    assert ok
+    ok, reason = cell_applicable(get_config("deepseek-67b"), SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in reason
+    ok, _ = cell_applicable(get_config("whisper-small"), SHAPES["decode_32k"])
+    assert ok  # enc-dec decodes; only encoder-only archs would skip
+
+
+@pytest.mark.slow
+def test_local_moe_shard_map_matches_global_on_fake_mesh(tmp_path):
+    """8 forced devices: moe_impl=local (shard_map) must equal moe_impl=global."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_reduced
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_mod
+from repro.sharding import partition
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ("data", "model"))
+key = jax.random.PRNGKey(3)
+cfg = get_reduced("qwen3-moe-235b-a22b").with_(dtype="float32", d_model=8)
+m = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16, capacity_factor=8.0)
+p, _ = moe_mod.init_moe(key, cfg.with_(moe=m))
+x = jax.random.normal(key, (4, 16, 8), jnp.float32)
+with partition.use_mesh(mesh):
+    yg, _ = jax.jit(lambda x, p: moe_mod.moe_ffn(x, p, cfg.with_(moe=m, moe_impl="global")))(x, p)
+    yl, _ = jax.jit(lambda x, p: moe_mod.moe_ffn(x, p, cfg.with_(moe=m, moe_impl="local")))(x, p)
+assert jnp.allclose(yg, yl, atol=1e-5), float(jnp.max(jnp.abs(yg - yl)))
+print("LOCAL_MOE_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=600, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "LOCAL_MOE_OK" in out.stdout

@@ -1,0 +1,139 @@
+"""Fault tolerance (paper §5.3, §6.3): heartbeats, watchdog, re-execution,
+elastic replacement, speculation, and the optimizations' behaviours."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import FunctionService, TaskState
+
+
+def _sleepy(doc):
+    time.sleep(doc.get("t", 0.03))
+    return {"i": doc.get("i", -1)}
+
+
+def test_executor_failure_recovers_all_tasks():
+    svc = FunctionService()
+    ep = svc.make_endpoint("ft", n_executors=2, workers_per_executor=2,
+                           heartbeat_interval_s=0.05)
+    fid = svc.register_function(_sleepy)
+    futs = [svc.run(fid, {"i": i, "t": 0.05}) for i in range(12)]
+    time.sleep(0.08)
+    ep.kill_executor(0)
+    results = [f.result(timeout=30) for f in futs]
+    assert sorted(r["i"] for r in results) == list(range(12))
+    assert ep.lost_executors == 1
+    assert ep.requeued > 0
+    svc.shutdown()
+
+
+def test_elastic_replacement_restores_capacity():
+    svc = FunctionService()
+    ep = svc.make_endpoint("el", n_executors=2, workers_per_executor=1,
+                           heartbeat_interval_s=0.05, elastic=True, max_executors=4)
+    fid = svc.register_function(_sleepy)
+    before = len(ep.executors)
+    futs = [svc.run(fid, {"i": i, "t": 0.03}) for i in range(6)]
+    time.sleep(0.05)
+    ep.kill_executor(0)
+    [f.result(20) for f in futs]
+    deadline = time.monotonic() + 5
+    while len(ep.executors) < before and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert len(ep.executors) >= before  # watchdog replaced the dead block
+    svc.shutdown()
+
+
+def test_task_retries_exhausted_raises():
+    svc = FunctionService()
+    ep = svc.make_endpoint("rx", n_executors=1, workers_per_executor=1,
+                           heartbeat_interval_s=0.05)
+
+    def flaky(doc):
+        raise RuntimeError("always fails")
+
+    fid = svc.register_function(flaky)
+    fut = svc.run(fid, {}, max_retries=1)
+    with pytest.raises(RuntimeError):
+        fut.result(20)
+    svc.shutdown()
+
+
+def test_retry_succeeds_after_transient_failure():
+    svc = FunctionService()
+    svc.make_endpoint("tr", n_executors=1, workers_per_executor=1)
+    state = {"n": 0}
+
+    def transient(doc):
+        state["n"] += 1
+        if state["n"] < 3:
+            raise IOError("transient")
+        return {"ok": True, "attempts": state["n"]}
+
+    fid = svc.register_function(transient)
+    out = svc.run(fid, {}, max_retries=3, sync=True, timeout=20)
+    assert out["ok"] and out["attempts"] == 3
+    svc.shutdown()
+
+
+def test_speculative_duplicate_first_result_wins():
+    svc = FunctionService()
+    ep = svc.make_endpoint("sp", n_executors=2, workers_per_executor=1,
+                           heartbeat_interval_s=0.05, speculation=True,
+                           speculation_multiplier=2.0)
+    fid = svc.register_function(_sleepy)
+    # establish a latency baseline
+    [svc.run(fid, {"i": i, "t": 0.01}).result(10) for i in range(10)]
+    # one straggler: 50x the baseline
+    fut = svc.run(fid, {"i": 99, "t": 0.5})
+    out = fut.result(20)
+    assert out["i"] == 99
+    assert fut.state == TaskState.SUCCESS
+    svc.shutdown()
+
+
+def test_memoization_serves_repeats_without_execution():
+    svc = FunctionService()
+    svc.make_endpoint("memo", n_executors=1, workers_per_executor=1)
+    calls = {"n": 0}
+
+    def counted(doc):
+        calls["n"] += 1
+        return {"v": int(np.asarray(doc["x"]).sum())}
+
+    fid = svc.register_function(counted)
+    p = {"x": np.arange(5)}
+    a = svc.run(fid, p, memoize=True).result(10)
+    b_fut = svc.run(fid, p, memoize=True)
+    b = b_fut.result(10)
+    assert a == b
+    assert calls["n"] == 1
+    assert b_fut.state == TaskState.MEMOIZED
+    # different payload executes again
+    svc.run(fid, {"x": np.arange(6)}, memoize=True).result(10)
+    assert calls["n"] == 2
+    svc.shutdown()
+
+
+def test_user_batched_run_returns_per_request_futures():
+    svc = FunctionService()
+    svc.make_endpoint("ub", n_executors=1, workers_per_executor=1)
+
+    def double(doc):
+        return {"y": np.asarray(doc["x"]) * 2}
+
+    fid = svc.register_function(double)
+    futs = svc.batch_run(fid, [{"x": np.full(2, i)} for i in range(5)],
+                         user_batched=True)
+    outs = [f.result(10) for f in futs]
+    assert [int(o["y"][0]) for o in outs] == [0, 2, 4, 6, 8]
+    svc.shutdown()
+
+
+def test_prefetch_capacity_advertised():
+    svc = FunctionService()
+    ep = svc.make_endpoint("pf", n_executors=1, workers_per_executor=2, prefetch=4)
+    ex = list(ep.executors.values())[0]
+    assert ex.free_capacity() == 2 + 4  # idle workers + prefetch allowance
+    svc.shutdown()

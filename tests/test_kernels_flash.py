@@ -1,0 +1,130 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle: shape/dtype/causal/
+GQA sweeps in interpret mode (assignment requirement: per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import (
+    decode_attention_pallas,
+    flash_attention_pallas,
+)
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(key, shape, dt):
+    return jax.random.normal(key, shape, dt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,KV,hd",
+    [
+        (1, 64, 64, 4, 4, 32),     # MHA
+        (2, 128, 128, 8, 2, 64),   # GQA 4:1
+        (1, 96, 96, 6, 1, 16),     # MQA, non-pow2 heads
+        (1, 100, 132, 4, 2, 32),   # unaligned seq (padding path)
+        (2, 32, 256, 4, 4, 64),    # Skv >> Sq
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(B, Sq, Skv, H, KV, hd, causal, dtype, key):
+    if causal and Sq != Skv:
+        pytest.skip("causal sweep uses square shapes")
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (B, Sq, H, hd), dtype)
+    k = _rand(ks[1], (B, Skv, KV, hd), dtype)
+    v = _rand(ks[2], (B, Skv, KV, hd), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=32, block_k=32,
+                                 interpret=True)
+    expected = ref.mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expected.astype(jnp.float32),
+        rtol=TOL[dtype], atol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("block", [16, 64, 128])
+def test_flash_block_shape_invariance(block, key):
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (1, 128, 4, 32), jnp.float32)
+    k = _rand(ks[1], (1, 128, 4, 32), jnp.float32)
+    v = _rand(ks[2], (1, 128, 4, 32), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=block, block_k=block,
+                                 interpret=True)
+    expected = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kv_len_masking(key):
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (1, 16, 2, 16), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 16), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=False, kv_len=jnp.int32(20),
+                                 block_q=16, block_k=16, interpret=True)
+    expected = ref.mha_reference(q, k, v, causal=False, kv_len=jnp.int32(20))
+    np.testing.assert_allclose(out, expected, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_q_offset_decode_window(key):
+    """q_offset shifts absolute positions (used when decoding a block of
+    suffix tokens against a longer cache)."""
+    ks = jax.random.split(key, 3)
+    S = 64
+    q_full = _rand(ks[0], (1, S, 2, 16), jnp.float32)
+    k = _rand(ks[1], (1, S, 2, 16), jnp.float32)
+    v = _rand(ks[2], (1, S, 2, 16), jnp.float32)
+    full = ref.mha_reference(q_full, k, v, causal=True)
+    tail = flash_attention_pallas(
+        q_full[:, 48:], k, v, causal=True, q_offset=jnp.int32(48),
+        block_q=16, block_k=16, interpret=True,
+    )
+    np.testing.assert_allclose(tail, full[:, 48:], rtol=2e-5, atol=2e-5)
+
+
+@given(
+    pos=st.integers(min_value=0, max_value=47),
+    kv=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=12, deadline=None)
+def test_decode_kernel_property(pos, kv):
+    key = jax.random.PRNGKey(pos)
+    ks = jax.random.split(key, 3)
+    B, S, H, hd = 2, 48, 4, 16
+    q = _rand(ks[0], (B, 1, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, kv, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, kv, hd), jnp.float32)
+    out = decode_attention_pallas(q, kc, vc, jnp.int32(pos), interpret=True)
+    expected = ref.decode_attention_reference(q, kc, vc, jnp.int32(pos))
+    np.testing.assert_allclose(out, expected, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_kernel_vector_positions(key):
+    ks = jax.random.split(key, 3)
+    B, S, KV, H, hd = 3, 32, 2, 4, 16
+    q = _rand(ks[0], (B, 1, H, hd), jnp.float32)
+    kc = _rand(ks[1], (B, S, KV, hd), jnp.float32)
+    vc = _rand(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.array([3, 17, 31], jnp.int32)
+    out = decode_attention_pallas(q, kc, vc, pos, interpret=True)
+    expected = ref.decode_attention_reference(q, kc, vc, pos)
+    np.testing.assert_allclose(out, expected, rtol=3e-5, atol=3e-5)
+
+
+def test_causality_property(key):
+    """Changing future keys/values must not change past outputs."""
+    ks = jax.random.split(key, 4)
+    q = _rand(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = _rand(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = _rand(ks[2], (1, 64, 2, 16), jnp.float32)
+    out1 = flash_attention_pallas(q, k, v, causal=True, block_q=16, block_k=16,
+                                  interpret=True)
+    k2 = k.at[:, 40:].set(_rand(ks[3], (1, 24, 2, 16), jnp.float32))
+    out2 = flash_attention_pallas(q, k2, v, causal=True, block_q=16, block_k=16,
+                                  interpret=True)
+    np.testing.assert_allclose(out1[:, :40], out2[:, :40], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, 41:], out2[:, 41:])

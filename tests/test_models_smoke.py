@@ -1,0 +1,89 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward +
+one train step on CPU, asserting output shapes and no NaNs (assignment
+requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models.model import Model
+from repro.training import optimizer as opt
+from repro.training.steps import build_train_step
+
+B, S = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss_finite(arch, key):
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, B, S)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    assert metrics["ce"] > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_updates_params_no_nan(arch, key):
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(key)
+    state = opt.init_state(params)
+    built = build_train_step(model, opt.OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                                        total_steps=10))
+    step = jax.jit(built.fn)
+    batch = make_batch(cfg, B, S)
+    new_params, new_state, metrics = step(params, state, batch)
+    assert int(new_state["step"]) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # at least one leaf changed, none became NaN
+    changed = False
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert not bool(jnp.any(jnp.isnan(b.astype(jnp.float32)))), arch
+        changed = changed or not np.array_equal(np.asarray(a), np.asarray(b))
+    assert changed, f"{arch}: train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_shapes(arch, key):
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, B, S)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    cache0, specs = model.init_cache(B, S + 4)
+    tok = jnp.asarray(batch["tokens"][:, :1])
+    out, new_cache = jax.jit(model.decode_step)(params, tok, cache0, jnp.int32(0))
+    assert out.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache0)
+
+
+def test_full_configs_match_published_param_counts():
+    expected_b = {
+        "deepseek-67b": (66, 69),
+        "qwen3-moe-235b-a22b": (230, 240),
+        "qwen2-moe-a2.7b": (13, 15),
+        "minicpm3-4b": (3.8, 4.7),
+        "mamba2-2.7b": (2.6, 3.0),
+        "zamba2-2.7b": (2.1, 3.0),
+        "internvl2-26b": (18, 21),      # LM backbone only (ViT is stubbed)
+        "qwen2-0.5b": (0.4, 0.55),
+        "qwen1.5-0.5b": (0.4, 0.55),
+        "whisper-small": (0.2, 0.4),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.param_count(active_only=True) / 1e9
+    assert 20 <= active <= 24  # "A22B"
