@@ -1,0 +1,78 @@
+"""Federated fabric: throughput and p50/p95 latency as endpoints scale.
+
+The follow-up funcX papers make the Forwarder the unit of federation; this
+suite measures what that tier buys: aggregate throughput and tail latency for
+a worker-bound task at 1, 2, and 4 endpoints under each endpoint-routing
+policy, plus a heterogeneous-fabric case where ``latency_aware`` routing must
+learn to avoid a slow (high simulated RTT) endpoint.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import FunctionService
+
+from .common import emit, percentile, scaled, sleeper
+
+N = scaled(300, 100)
+TASK_S = 0.02  # worker-bound: fabric capacity, not submit overhead, dominates
+POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
+ENDPOINT_COUNTS = (1, 2, 4)
+
+
+def _drive(svc: FunctionService, fid: str, n: int):
+    # warm-up: let endpoint/executor/worker threads finish spinning up and
+    # executables warm so the timed window measures steady-state routing
+    warm = [svc.run(fid, {"i": -1, "t": 0.0}) for _ in range(16)]
+    for f in warm:
+        f.result(30)
+    t0 = time.monotonic()
+    futs = [svc.run(fid, {"i": i, "t": TASK_S}) for i in range(n)]
+    lats = []
+    for f in futs:
+        f.result(120)
+        ts = f.timestamps
+        lats.append(ts.result_ready - ts.client_submit)
+    return time.monotonic() - t0, lats
+
+
+def run():
+    rows = []
+    for policy in POLICIES:
+        for n_eps in ENDPOINT_COUNTS:
+            svc = FunctionService(policy=policy)
+            for i in range(n_eps):
+                svc.make_endpoint(f"fed{i}", n_executors=2, workers_per_executor=4,
+                                  prefetch=2)
+            fid = svc.register_function(sleeper, name="sleeper")
+            dt, lats = _drive(svc, fid, N)
+            rows.append(emit(
+                f"federation/{policy}/ep{n_eps}",
+                dt / N * 1e6,
+                f"{N/dt:.0f} req/s p50={percentile(lats, 50)*1e3:.1f}ms "
+                f"p95={percentile(lats, 95)*1e3:.1f}ms",
+            ))
+            svc.shutdown()
+
+    # heterogeneous fabric: one endpoint simulates a 20ms WAN RTT dispatch
+    # cadence; latency_aware should learn to send traffic to the fast site
+    for policy in ("random", "latency_aware"):
+        svc = FunctionService(policy=policy)
+        svc.make_endpoint("near", n_executors=2, workers_per_executor=4, prefetch=2)
+        svc.make_endpoint("far", n_executors=2, workers_per_executor=4, prefetch=2,
+                          dispatch_interval_s=0.02)
+        fid = svc.register_function(sleeper, name="sleeper")
+        n = max(N // 2, 50)
+        dt, lats = _drive(svc, fid, n)
+        fwd = svc.forwarder.stats()["endpoints"]
+        near_share = max(
+            (s["routed"] for s in fwd.values()), default=0
+        ) / max(1, sum(s["routed"] for s in fwd.values()))
+        rows.append(emit(
+            f"federation/hetero_{policy}",
+            dt / n * 1e6,
+            f"{n/dt:.0f} req/s p95={percentile(lats, 95)*1e3:.1f}ms "
+            f"hot-endpoint share={near_share:.2f}",
+        ))
+        svc.shutdown()
+    return rows

@@ -6,7 +6,7 @@ import time
 
 from repro.core import FunctionService
 
-from .common import emit
+from .common import emit, scaled
 
 
 def hello_world(event):
@@ -27,7 +27,7 @@ def run():
 
     # warm: steady state over 500 invocations
     lats, breakdown = [], {"t_c": 0.0, "t_w": 0.0, "t_m": 0.0, "t_e": 0.0}
-    N = 500
+    N = scaled(500, 50)
     for _ in range(N):
         t0 = time.monotonic()
         fut = svc.run(fid, "hello-world")
@@ -57,10 +57,11 @@ def run():
     t0 = time.monotonic()
     svc.run(fid2, payload).result(60)
     cold2 = time.monotonic() - t0
+    reps = scaled(50, 10)
     t0 = time.monotonic()
-    for _ in range(50):
+    for _ in range(reps):
         svc.run(fid2, payload).result(10)
-    warm2 = (time.monotonic() - t0) / 50
+    warm2 = (time.monotonic() - t0) / reps
     rows.append(emit("latency/jax_cold_compile", cold2 * 1e6, "trace+lower+XLA compile"))
     rows.append(emit("latency/jax_warm", warm2 * 1e6, "warm executable cache"))
     svc.shutdown()

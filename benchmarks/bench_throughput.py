@@ -6,9 +6,9 @@ import time
 
 from repro.core import FunctionService
 
-from .common import emit, noop
+from .common import emit, noop, scaled
 
-N = 3000
+N = scaled(3000, 200)
 
 
 def run():

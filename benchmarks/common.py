@@ -1,10 +1,21 @@
 """Shared benchmark helpers: CSV emission in the required format."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Dict, List
 
 import numpy as np
+
+
+def smoke_mode() -> bool:
+    """CI smoke runs (benchmarks/run.py --smoke) use tiny parameters so the
+    whole suite finishes in seconds while still exercising every code path."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def scaled(n: int, smoke_n: int) -> int:
+    return smoke_n if smoke_mode() else n
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> Dict[str, Any]:

@@ -16,6 +16,7 @@ SUITES = (
     "latency",        # Fig. 4/5, Table 2
     "scaling",        # Fig. 6 strong + weak
     "throughput",     # §6.2.3
+    "federation",     # multi-endpoint fabric: policies x endpoint counts
     "fault",          # Fig. 7
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)
@@ -28,7 +29,11 @@ SUITES = (
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", help="comma-separated subset of suites")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI smoke runs")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     selected = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")

@@ -1,7 +1,7 @@
 """funcJAX core: the paper's FaaS platform (funcX) as a JAX-native runtime.
 
 Public API:
-    FunctionService, Endpoint, TaskFuture, TokenAuthority, Flow
+    FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -16,6 +16,7 @@ from .automation import ActionStep, Flow, FlowRun  # noqa: F401
 from .batching import MicroBatcher, stack_payloads, unstack_results  # noqa: F401
 from .endpoint import Endpoint  # noqa: F401
 from .executor import Executor  # noqa: F401
+from .forwarder import ENDPOINT_POLICIES, EndpointRecord, Forwarder  # noqa: F401
 from .futures import TaskEnvelope, TaskFuture, TaskState  # noqa: F401
 from .heartbeat import HeartbeatMonitor, LatencyTracker  # noqa: F401
 from .memoization import MemoCache  # noqa: F401

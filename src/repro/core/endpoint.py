@@ -74,6 +74,7 @@ class Endpoint:
         self.futures: Dict[str, TaskFuture] = {}
         self._flock = threading.Lock()
         self.executors: Dict[str, Executor] = {}
+        self._exlock = threading.Lock()  # guards executors against fabric-thread readers
         self._speculated: set[str] = set()
         self.completed = 0
         self.requeued = 0
@@ -93,6 +94,7 @@ class Endpoint:
         provider.scale_out(n_executors)
 
         self._alive = True
+        self.last_heartbeat = time.monotonic()
         self._manager = threading.Thread(target=self._manager_loop, name=f"{name}/mgr", daemon=True)
         self._manager.start()
 
@@ -108,8 +110,13 @@ class Endpoint:
             monitor=self.monitor,
             heartbeat_interval_s=self.heartbeat_interval_s,
         )
-        self.executors[ex.executor_id] = ex
+        with self._exlock:
+            self.executors[ex.executor_id] = ex
         return ex
+
+    def _executor_list(self) -> List[Executor]:
+        with self._exlock:
+            return list(self.executors.values())
 
     # -- submission --------------------------------------------------------
     def submit(self, env: TaskEnvelope, future: TaskFuture) -> None:
@@ -125,11 +132,30 @@ class Endpoint:
         with self._qlock:
             return len(self._queue)
 
+    # -- fabric-facing surface (consumed by the Forwarder) -------------------
+    def capacity(self) -> int:
+        """Advertised worker capacity: what the endpoint tells the fabric it
+        can absorb (sum of workers across accepting executors)."""
+        return sum(ex.n_workers for ex in self._executor_list() if ex.accepting())
+
+    def has_warm(self, key) -> bool:
+        """Endpoint-tier warm probe: any accepting executor holds a warm
+        executable for (function_id, container)."""
+        return any(ex.has_warm(key) for ex in self._executor_list() if ex.accepting())
+
+    def is_alive(self, max_heartbeat_age_s: Optional[float] = None) -> bool:
+        if not self._alive:
+            return False
+        if max_heartbeat_age_s is None:
+            return True
+        return (time.monotonic() - self.last_heartbeat) <= max_heartbeat_age_s
+
     # -- manager loop -------------------------------------------------------
     def _manager_loop(self) -> None:
         last_watchdog = 0.0
         last_dispatch = 0.0
         while self._alive:
+            self.last_heartbeat = time.monotonic()
             # 1) results (block briefly here — it is the latency-critical path)
             try:
                 res = self.result_queue.get(timeout=self.tick_s)
@@ -192,8 +218,7 @@ class Endpoint:
                 if not self._queue:
                     return
                 env = self._queue[0]
-            executors = list(self.executors.values())
-            ex = self.scheduler.choose(executors, env)
+            ex = self.scheduler.choose(self._executor_list(), env)
             if ex is None:
                 return
             with self._qlock:
@@ -247,12 +272,13 @@ class Endpoint:
                     self.requeued += 1
                 else:
                     fut.set_exception(RuntimeError(f"task lost with executor {eid}"))
-            del self.executors[eid]
+            with self._exlock:
+                del self.executors[eid]
             if self.elastic:
                 self.provider.scale_out(1)  # replacement block
 
     def _autoscale(self) -> None:
-        capacity = sum(e.n_workers for e in self.executors.values() if e.accepting())
+        capacity = sum(e.n_workers for e in self._executor_list() if e.accepting())
         depth = self.queue_depth()
         if depth > 2 * max(capacity, 1):
             self.provider.scale_out(1)
@@ -262,7 +288,7 @@ class Endpoint:
         if p95 is None:
             return
         limit = p95 * self.speculation_multiplier
-        for ex in list(self.executors.values()):
+        for ex in self._executor_list():
             for env in ex.running_longer_than(limit):
                 if env.task_id in self._speculated or env.speculative_of:
                     continue
@@ -288,24 +314,35 @@ class Endpoint:
     # -- fault injection ----------------------------------------------------
     def kill_executor(self, index: int = 0) -> str:
         """Hard-kill the index-th executor (Fig. 7 fault experiment)."""
-        eid = sorted(self.executors)[index]
-        self.executors[eid].kill()
+        with self._exlock:
+            eid = sorted(self.executors)[index]
+            ex = self.executors[eid]
+        ex.kill()
         return eid
+
+    def kill(self) -> None:
+        """Simulated whole-endpoint death (site outage): the manager loop
+        halts, heartbeats stop, and every executor dies with its in-flight
+        work. The Forwarder's watchdog re-routes stranded tasks."""
+        self._alive = False
+        for ex in self._executor_list():
+            ex.kill()
 
     # -- lifecycle -----------------------------------------------------------
     def shutdown(self) -> None:
         self._alive = False
         self._manager.join(timeout=2.0)
-        for ex in list(self.executors.values()):
+        for ex in self._executor_list():
             ex.shutdown()
-        self.executors.clear()
+        with self._exlock:
+            self.executors.clear()
 
     def wait_idle(self, timeout: float = 30.0) -> bool:
         """Wait until queue and all executors are drained."""
         t0 = time.monotonic()
         while time.monotonic() - t0 < timeout:
             busy = self.queue_depth() or any(
-                len(e.in_flight) or e.inbox.qsize() for e in self.executors.values()
+                len(e.in_flight) or e.inbox.qsize() for e in self._executor_list()
             )
             if not busy:
                 return True
@@ -320,6 +357,6 @@ class Endpoint:
             "completed": self.completed,
             "requeued": self.requeued,
             "lost_executors": self.lost_executors,
-            "executors": {eid: ex.stats() for eid, ex in self.executors.items()},
+            "executors": {ex.executor_id: ex.stats() for ex in self._executor_list()},
             "p95_latency_s": self.tracker.p95(),
         }

@@ -1,0 +1,318 @@
+"""Forwarder: the federated multi-endpoint fabric tier.
+
+The follow-up funcX papers (arXiv:2005.04215, arXiv:2209.11631) make the
+Forwarder the central abstraction: a service-side component that owns the
+registry of *endpoints* (not executors), tracks their health and observed
+performance, and routes every task to some endpoint "without regard for the
+physical resource location". This module generalizes the per-executor
+policies in :mod:`repro.core.scheduler` one tier up:
+
+- ``random``: uniform choice among live endpoints (paper-faithful baseline).
+- ``least_outstanding``: fewest tasks currently routed-but-unfinished.
+- ``latency_aware``: lowest EWMA of observed endpoint latency; unmeasured
+  endpoints are explored first.
+- ``warm_affinity``: prefer endpoints holding a warm executable for the
+  task's (function, container), tie-broken by least outstanding.
+
+The Forwarder also runs a liveness watchdog over endpoint heartbeats: when an
+endpoint dies mid-task (``Endpoint.kill()`` or a hung manager loop), every
+outstanding task routed there is failed over to a surviving endpoint.
+``TaskFuture.set_result`` is idempotent, so a false-positive death detection
+degrades into a speculative duplicate — first result wins — and a
+false-positive endpoint is resurrected once its heartbeat resumes.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .futures import TaskEnvelope, TaskFuture
+
+ENDPOINT_POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
+
+
+@dataclass
+class EndpointRecord:
+    """Forwarder-side bookkeeping for one registered endpoint."""
+
+    endpoint: object                     # Endpoint-shaped: see FakeEndpoint in tests
+    outstanding: Dict[str, TaskEnvelope] = field(default_factory=dict)
+    latency_ewma: Optional[float] = None  # observed endpoint-tier latency (s)
+    routed: int = 0
+    completed: int = 0
+    dead: bool = False
+
+
+class Forwarder:
+    def __init__(
+        self,
+        policy: str = "least_outstanding",
+        seed: Optional[int] = None,
+        ewma_alpha: float = 0.25,
+        liveness_threshold_s: float = 2.0,
+        watchdog_interval_s: float = 0.05,
+        failover: bool = True,
+    ):
+        if policy not in ENDPOINT_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; choose from {ENDPOINT_POLICIES}"
+            )
+        self.policy = policy
+        self.ewma_alpha = ewma_alpha
+        self.liveness_threshold_s = liveness_threshold_s
+        self.watchdog_interval_s = watchdog_interval_s
+        self.failover = failover
+        self.failovers = 0
+        self.orphaned = 0  # tasks that died with no surviving endpoint
+
+        self._rng = random.Random(seed)
+        self._records: Dict[str, EndpointRecord] = {}
+        self._futures: Dict[str, TaskFuture] = {}
+        self._lock = threading.RLock()
+        self._alive = True
+        self._watchdog = threading.Thread(
+            target=self._watchdog_loop, name="forwarder/watchdog", daemon=True
+        )
+        self._watchdog.start()
+
+    # -- endpoint registry ---------------------------------------------------
+    def register(self, endpoint) -> str:
+        with self._lock:
+            self._records[endpoint.endpoint_id] = EndpointRecord(endpoint=endpoint)
+        return endpoint.endpoint_id
+
+    def deregister(self, endpoint_id: str) -> None:
+        with self._lock:
+            self._records.pop(endpoint_id, None)
+
+    def endpoint_ids(self) -> List[str]:
+        with self._lock:
+            return list(self._records)
+
+    def endpoints(self) -> Dict[str, object]:
+        """Registered endpoints by id (the single source of truth)."""
+        with self._lock:
+            return {eid: rec.endpoint for eid, rec in self._records.items()}
+
+    def _is_live(self, rec: EndpointRecord) -> bool:
+        if rec.dead:
+            return False
+        is_alive = getattr(rec.endpoint, "is_alive", None)
+        return is_alive(self.liveness_threshold_s) if is_alive else True
+
+    def _live_records(self) -> List[EndpointRecord]:
+        return [r for r in self._records.values() if self._is_live(r)]
+
+    def live_count(self) -> int:
+        with self._lock:
+            return len(self._live_records())
+
+    # -- routing -------------------------------------------------------------
+    def choose(self, env: TaskEnvelope):
+        """Pick a live endpoint for `env` under the configured policy.
+        Returns None when no endpoint is live."""
+        with self._lock:
+            live = self._live_records()
+            if not live:
+                return None
+            if self.policy == "random":
+                rec = self._rng.choice(live)
+            elif self.policy == "least_outstanding":
+                rec = min(live, key=lambda r: (len(r.outstanding), r.routed))
+            elif self.policy == "latency_aware":
+                unmeasured = [r for r in live if r.latency_ewma is None]
+                if unmeasured:  # explore before exploiting
+                    rec = min(unmeasured, key=lambda r: (len(r.outstanding), r.routed))
+                else:
+                    # backlog-weighted EWMA: raw EWMA lags behind a burst, so
+                    # scale by outstanding/capacity to avoid dogpiling the
+                    # endpoint that last looked fastest
+                    def score(r):
+                        backlog = len(r.outstanding) / max(1, r.endpoint.capacity())
+                        return (r.latency_ewma * (1.0 + backlog), len(r.outstanding))
+
+                    rec = min(live, key=score)
+            elif self.policy == "warm_affinity":
+                key = (env.function_id, env.container)
+                warm = [
+                    r for r in live
+                    if r.endpoint.has_warm(key)
+                    and len(r.outstanding) < max(1, r.endpoint.capacity())
+                ]
+                # saturated-warm spills to cold endpoints (which then warm up)
+                pool = warm or live
+                rec = min(pool, key=lambda r: (len(r.outstanding), r.routed))
+            else:  # pragma: no cover
+                raise AssertionError(self.policy)
+            return rec.endpoint
+
+    def submit(
+        self,
+        env: TaskEnvelope,
+        future: TaskFuture,
+        endpoint_id: Optional[str] = None,
+    ) -> str:
+        """Route `env` to an endpoint (pinned when `endpoint_id` is given) and
+        track it until its future completes. Returns the chosen endpoint id."""
+        with self._lock:
+            if endpoint_id is not None:
+                rec = self._records.get(endpoint_id)
+                if rec is None:
+                    raise KeyError(f"unknown endpoint {endpoint_id!r}; register one first")
+                if not self._is_live(rec):
+                    rec = None  # pinned endpoint died: fall back to policy routing
+            else:
+                rec = None
+            if rec is None:
+                live = self._live_records()
+                if not live:
+                    raise RuntimeError("no live endpoints registered with the forwarder")
+                ep = self.choose(env)
+                rec = self._records[ep.endpoint_id]
+            rec.outstanding[env.task_id] = env
+            rec.routed += 1
+            self._futures[env.task_id] = future
+            endpoint = rec.endpoint
+        future.add_done_callback(lambda f, tid=env.task_id: self._on_done(tid, f))
+        endpoint.submit(env, future)
+        return endpoint.endpoint_id
+
+    def _on_done(self, task_id: str, future: TaskFuture) -> None:
+        with self._lock:
+            self._futures.pop(task_id, None)
+            for rec in self._records.values():
+                if task_id in rec.outstanding:
+                    rec.outstanding.pop(task_id)
+                    if future.exception(0) is None:
+                        rec.completed += 1
+                        ts = future.timestamps
+                        if ts.result_ready and ts.endpoint_in:
+                            lat = max(0.0, ts.result_ready - ts.endpoint_in)
+                            if rec.latency_ewma is None:
+                                rec.latency_ewma = lat
+                            else:
+                                rec.latency_ewma = (
+                                    self.ewma_alpha * lat
+                                    + (1 - self.ewma_alpha) * rec.latency_ewma
+                                )
+                    break
+
+    # -- capacity-proportional sharding ---------------------------------------
+    def shard(self, n: int) -> List[Tuple[str, int]]:
+        """Split an n-task fan-out across live endpoints proportional to their
+        advertised capacity (largest-remainder allocation)."""
+        with self._lock:
+            live = self._live_records()
+            if not live:
+                raise RuntimeError("no live endpoints registered with the forwarder")
+            caps = [max(1, rec.endpoint.capacity()) for rec in live]
+            ids = [rec.endpoint.endpoint_id for rec in live]
+        total = sum(caps)
+        quotas = [n * c / total for c in caps]
+        counts = [int(q) for q in quotas]
+        remainder = n - sum(counts)
+        by_fraction = sorted(
+            range(len(ids)), key=lambda i: quotas[i] - counts[i], reverse=True
+        )
+        for i in by_fraction[:remainder]:
+            counts[i] += 1
+        return list(zip(ids, counts))
+
+    # -- liveness watchdog + failover -----------------------------------------
+    def _watchdog_loop(self) -> None:
+        while self._alive:
+            time.sleep(self.watchdog_interval_s)
+            try:
+                self.check_endpoints()
+            except Exception:  # pragma: no cover - watchdog must never die
+                pass
+
+    def check_endpoints(self) -> List[str]:
+        """Detect newly-dead endpoints and fail their outstanding tasks over to
+        survivors. Returns the ids of endpoints declared dead this call."""
+        newly_dead: List[Tuple[EndpointRecord, List[TaskEnvelope]]] = []
+        with self._lock:
+            for rec in self._records.values():
+                if rec.dead:
+                    # resurrection: a heartbeat-stall false positive (GIL/CPU
+                    # pressure) recovers once the endpoint beats again; a
+                    # killed endpoint never does (_alive stays False)
+                    is_alive = getattr(rec.endpoint, "is_alive", None)
+                    if is_alive is None or is_alive(self.liveness_threshold_s):
+                        rec.dead = False
+                    continue
+                if self._is_live(rec):
+                    continue
+                rec.dead = True
+                stranded = list(rec.outstanding.values())
+                rec.outstanding.clear()
+                newly_dead.append((rec, stranded))
+        dead_ids = []
+        for rec, stranded in newly_dead:
+            dead_ids.append(rec.endpoint.endpoint_id)
+            if not self.failover:
+                continue
+            for env in stranded:
+                self._failover_task(env, rec)
+        return dead_ids
+
+    def _failover_task(self, env: TaskEnvelope, source: EndpointRecord) -> None:
+        with self._lock:
+            future = self._futures.get(env.task_id)
+        if future is None or future.done():
+            return
+        env.executor_id = None
+        try:
+            with self._lock:
+                live = self._live_records()
+                if not live:
+                    raise RuntimeError("no surviving endpoint for failover")
+                ep = self.choose(env)
+                rec = self._records[ep.endpoint_id]
+                rec.outstanding[env.task_id] = env
+                rec.routed += 1
+            self.failovers += 1
+            ep.submit(env, future)
+        except RuntimeError as exc:
+            is_alive = getattr(source.endpoint, "is_alive", None)
+            if is_alive is not None and is_alive(None):
+                # merely stalled, not halted: leave the task with its
+                # endpoint — it still owns the future and can complete it.
+                # Re-check done under the lock: if it completed since the
+                # outstanding map was cleared, _on_done already ran and a
+                # re-add would leak a phantom entry forever.
+                with self._lock:
+                    if not future.done():
+                        source.outstanding[env.task_id] = env
+                return
+            self.orphaned += 1
+            future.set_exception(
+                RuntimeError(f"task {env.task_id} lost: {exc}")
+            )
+
+    # -- lifecycle / stats ----------------------------------------------------
+    def shutdown(self) -> None:
+        self._alive = False
+        self._watchdog.join(timeout=2.0)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "policy": self.policy,
+                "failovers": self.failovers,
+                "orphaned": self.orphaned,
+                "endpoints": {
+                    eid: {
+                        "routed": rec.routed,
+                        "completed": rec.completed,
+                        "outstanding": len(rec.outstanding),
+                        "latency_ewma_s": rec.latency_ewma,
+                        "dead": rec.dead,
+                        "capacity": rec.endpoint.capacity() if not rec.dead else 0,
+                    }
+                    for eid, rec in self._records.items()
+                },
+            }

@@ -7,6 +7,12 @@ REST-shaped API surface:
     batch_run(function_id, payloads)    -> [TaskFuture]  (user-driven batching)
     status(task) / result(task)
 
+Invocation is federated: tasks flow service -> Forwarder -> endpoint, so a
+request executes "without regard for the physical resource location". Passing
+an explicit ``endpoint_id`` pins a task but still travels through the
+Forwarder so liveness tracking and failover apply. ``map()`` fan-outs are
+sharded across endpoints proportional to advertised capacity.
+
 All invocation paths stamp the Fig.-5 timestamp trail. Memoization (§5.5) is
 service-side: hits complete the future immediately without touching an
 endpoint.
@@ -21,6 +27,7 @@ from . import serializer
 from .auth import Token, TokenAuthority
 from .batching import stack_payloads, unstack_results
 from .endpoint import Endpoint
+from .forwarder import Forwarder
 from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
 from .memoization import MemoCache
 from .registry import FunctionRegistry
@@ -32,12 +39,19 @@ class FunctionService:
         self,
         authority: Optional[TokenAuthority] = None,
         memo_entries: int = 4096,
+        policy: str = "least_outstanding",
+        forwarder: Optional[Forwarder] = None,
     ):
         self.registry = FunctionRegistry()
         self.memo = MemoCache(max_entries=memo_entries)
         self.authority = authority
-        self.endpoints: Dict[str, Endpoint] = {}
-        self._default_endpoint: Optional[str] = None
+        self.forwarder = forwarder if forwarder is not None else Forwarder(policy=policy)
+
+    @property
+    def endpoints(self) -> Dict[str, Endpoint]:
+        """Registered endpoints, derived from the forwarder's registry (the
+        single source of truth, so fabric-level deregistration cannot desync)."""
+        return self.forwarder.endpoints()
 
     # -- auth ------------------------------------------------------------
     def _identity(self, token: Optional[Token], scope: str) -> str:
@@ -63,22 +77,18 @@ class FunctionService:
     def register_endpoint(
         self,
         endpoint: Endpoint,
-        default: bool = False,
         token: Optional[Token] = None,
     ) -> str:
         self._identity(token, auth_mod.SCOPE_REGISTER_ENDPOINT)
         endpoint.result_hook = self._on_result
         endpoint.memo_probe = self._memo_probe
-        self.endpoints[endpoint.endpoint_id] = endpoint
-        if default or self._default_endpoint is None:
-            self._default_endpoint = endpoint.endpoint_id
-        return endpoint.endpoint_id
+        return self.forwarder.register(endpoint)
 
-    def make_endpoint(self, name: str, default: bool = False, token: Optional[Token] = None,
+    def make_endpoint(self, name: str, token: Optional[Token] = None,
                       **kwargs: Any) -> Endpoint:
         """Convenience: construct an Endpoint bound to this service's registry."""
         ep = Endpoint(name=name, registry=self.registry, result_hook=self._on_result, **kwargs)
-        self.register_endpoint(ep, default=default, token=token)
+        self.register_endpoint(ep, token=token)
         return ep
 
     # -- invocation ---------------------------------------------------------
@@ -115,7 +125,6 @@ class FunctionService:
                 future.set_result(value, state=TaskState.MEMOIZED)
                 return future.result(timeout) if sync else future
 
-        ep = self._endpoint(endpoint_id)
         env = TaskEnvelope(
             task_id=future.task_id,
             function_id=function_id,
@@ -128,7 +137,7 @@ class FunctionService:
         env.timestamps.service_in = future.timestamps.service_in
         if digest is not None:
             env.__dict__["_memo_digest"] = digest
-        ep.submit(env, future)
+        self.forwarder.submit(env, future, endpoint_id=endpoint_id)
         return future.result(timeout) if sync else future
 
     def batch_run(
@@ -163,6 +172,25 @@ class FunctionService:
 
     def map(self, function_id: str, payloads: Sequence[Any], endpoint_id: Optional[str] = None,
             timeout: Optional[float] = 120.0, **kwargs: Any) -> List[Any]:
+        """Fan out N invocations and gather results in order. With several live
+        endpoints and no pin, the fan-out is sharded across endpoints
+        proportional to their advertised capacity."""
+        payloads = list(payloads)
+        if (
+            endpoint_id is None
+            and not kwargs.get("user_batched")
+            and self.forwarder.live_count() > 1
+        ):
+            kwargs.pop("user_batched", None)  # falsy here; run() doesn't take it
+            futs: List[TaskFuture] = []
+            start = 0
+            for eid, count in self.forwarder.shard(len(payloads)):
+                for p in payloads[start : start + count]:
+                    futs.append(self.run(function_id, p, endpoint_id=eid, **kwargs))
+                start += count
+            for p in payloads[start:]:  # defensive: shard() should cover all
+                futs.append(self.run(function_id, p, **kwargs))
+            return [f.result(timeout) for f in futs]
         futs = self.batch_run(function_id, payloads, endpoint_id, **kwargs)
         return [f.result(timeout) for f in futs]
 
@@ -188,21 +216,17 @@ class FunctionService:
             return False, None
         return self.memo.get(env.function_id, digest)
 
-    def _endpoint(self, endpoint_id: Optional[str]) -> Endpoint:
-        eid = endpoint_id or self._default_endpoint
-        if eid is None or eid not in self.endpoints:
-            raise KeyError(f"unknown endpoint {eid!r}; register one first")
-        return self.endpoints[eid]
-
     # -- lifecycle ---------------------------------------------------------------
     def shutdown(self) -> None:
-        for ep in self.endpoints.values():
+        self.forwarder.shutdown()
+        for eid, ep in self.endpoints.items():
             ep.shutdown()
-        self.endpoints.clear()
+            self.forwarder.deregister(eid)
 
     def stats(self) -> dict:
         return {
             "functions": len(self.registry.list()),
             "endpoints": {eid: ep.stats() for eid, ep in self.endpoints.items()},
+            "forwarder": self.forwarder.stats(),
             "memo": self.memo.stats(),
         }

@@ -78,7 +78,7 @@ class Worker(threading.Thread):
         self.registry = registry
         self.warm_pool = warm_pool
         self.poll_s = poll_s
-        self._stop = threading.Event()
+        self._stop_event = threading.Event()
         self._drop_inflight = threading.Event()  # simulated node failure
         self.busy = False
         self.executed = 0
@@ -87,14 +87,14 @@ class Worker(threading.Thread):
     def simulate_failure(self) -> None:
         """Drop whatever is executing, produce no results, stop the loop."""
         self._drop_inflight.set()
-        self._stop.set()
+        self._stop_event.set()
 
     def stop(self) -> None:
-        self._stop.set()
+        self._stop_event.set()
 
     # -- main loop --------------------------------------------------------
     def run(self) -> None:
-        while not self._stop.is_set():
+        while not self._stop_event.is_set():
             try:
                 env = self.inbox.get(timeout=self.poll_s)
             except queue.Empty:

@@ -1,0 +1,9 @@
+"""jax-version compatibility for Pallas TPU kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; support
+both so the kernels run on the 0.4.x toolchain baked into this environment
+and on current jax.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams
+
 
 def _kernel(x_ref, d_ref, s_ref, res_ref, out_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -62,7 +64,7 @@ def fused_add_rmsnorm_pallas(
             jax.ShapeDtypeStruct(x2.shape, x.dtype),
             jax.ShapeDtypeStruct(x2.shape, x.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x2, d2, scale)
     if pad:

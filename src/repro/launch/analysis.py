@@ -209,10 +209,19 @@ def roofline_terms(
     return out
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a flat dict on recent jax but a
+    one-element list of dicts on jax<=0.4.x; normalize to a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def extract_costs(compiled) -> dict:
     """Static per-device costs of one compiled module (flops / HBM bytes /
     collective wire bytes)."""
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     return {
         "flops_per_device": float(cost.get("flops", 0.0)),
@@ -239,7 +248,12 @@ def extrapolate(base: dict, two_units: dict, units: int) -> dict:
 
 def analyze_compiled(compiled, n_chips: int, model_flops_total: Optional[float] = None) -> dict:
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    # jax<=0.4.x CompiledMemoryStats lacks peak_memory_in_bytes; temp size is
+    # the closest stand-in (peak transient allocation of the module)
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is None:
+        peak = mem.temp_size_in_bytes
+    cost = _cost_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
@@ -252,15 +266,15 @@ def analyze_compiled(compiled, n_chips: int, model_flops_total: Optional[float] 
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
-            "peak_bytes": mem.peak_memory_in_bytes,
+            "peak_bytes": peak,
             # XLA 'peak' excludes arguments; resident = args (weights/caches,
             # donated buffers alias into outputs) + peak temps
-            "resident_bytes": mem.argument_size_in_bytes + mem.peak_memory_in_bytes,
+            "resident_bytes": mem.argument_size_in_bytes + peak,
             "resident_gib": round(
-                (mem.argument_size_in_bytes + mem.peak_memory_in_bytes) / 2**30, 3
+                (mem.argument_size_in_bytes + peak) / 2**30, 3
             ),
             "fits_hbm": bool(
-                mem.argument_size_in_bytes + mem.peak_memory_in_bytes <= HW["hbm_bytes"]
+                mem.argument_size_in_bytes + peak <= HW["hbm_bytes"]
             ),
         },
         "cost": {

@@ -147,6 +147,15 @@ def _moe_ffn_shard_map(x: jnp.ndarray, p, cfg: ModelConfig):
     except ImportError:  # pragma: no cover
         from jax.experimental.shard_map import shard_map
 
+    import inspect
+
+    # the replication-check kwarg was renamed check_rep -> check_vma
+    check_kw = (
+        "check_vma"
+        if "check_vma" in inspect.signature(shard_map).parameters
+        else "check_rep"
+    )
+
     ctx = partition.current()
     mesh = ctx.mesh
     m = cfg.moe
@@ -175,7 +184,7 @@ def _moe_ffn_shard_map(x: jnp.ndarray, p, cfg: ModelConfig):
             P("model"), P("model"), P("model"),          # experts over model
         ),
         out_specs=(P(batch_axes if batch_axes else None), P()),
-        check_vma=False,
+        **{check_kw: False},
     )(x, p["router"], p["wi"], p["wg"], p["wo"])
     return y, aux
 

@@ -4,7 +4,10 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based cases skip without the dev extra
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (
     FunctionRegistry,

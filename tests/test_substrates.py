@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property-based cases skip without the dev extra
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs import get_reduced
 from repro.configs.base import MoEConfig
