@@ -54,6 +54,37 @@ def run():
             ))
             svc.shutdown()
 
+    # batched vs per-task across the fabric: the same worker-bound fan-out
+    # submitted as independent run() calls vs. one capacity-sharded batch per
+    # endpoint (TaskBatch frames through forwarder -> endpoint -> executor)
+    from repro.core import Forwarder
+
+    for n_eps in (1, 2):
+        svc = FunctionService(forwarder=Forwarder(max_batch=64))
+        for i in range(n_eps):
+            svc.make_endpoint(f"fb{i}", n_executors=2, workers_per_executor=4,
+                              prefetch=2)
+        fid = svc.register_function(sleeper, name="sleeper")
+        warm = [svc.run(fid, {"i": -1, "t": 0.0}) for _ in range(16)]
+        for f in warm:
+            f.result(30)
+        t0 = time.monotonic()
+        futs = [svc.run(fid, {"i": i, "t": 0.0}) for i in range(N)]
+        for f in futs:
+            f.result(120)
+        dt_task = time.monotonic() - t0
+        t0 = time.monotonic()
+        outs = svc.map(fid, [{"i": i, "t": 0.0} for i in range(N)], timeout=120)
+        dt_batch = time.monotonic() - t0
+        assert len(outs) == N
+        rows.append(emit(
+            f"federation/batched_vs_per_task/ep{n_eps}",
+            dt_batch / N * 1e6,
+            f"batched {N/dt_batch:.0f} req/s vs per-task {N/dt_task:.0f} req/s "
+            f"({dt_task/dt_batch:.2f}x)",
+        ))
+        svc.shutdown()
+
     # heterogeneous fabric: one endpoint simulates a 20ms WAN RTT dispatch
     # cadence; latency_aware should learn to send traffic to the fast site
     for policy in ("random", "latency_aware"):

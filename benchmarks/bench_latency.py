@@ -46,7 +46,6 @@ def run():
                      "x100; paper funcX cold/warm = 38x"))
 
     # jax-compiled function: cold = XLA compile, warm = executable-cache hit
-    import jax.numpy as jnp
 
     def compiled_fn(doc):
         return {"y": (doc["x"] @ doc["x"]).sum()}

@@ -5,8 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import FunctionService
 
 from .common import emit, sleeper

@@ -1,8 +1,10 @@
 """Model/config dataclasses shared by all assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+
+from typing import Optional
+
 
 
 @dataclass(frozen=True)

@@ -1,7 +1,8 @@
 """funcJAX core: the paper's FaaS platform (funcX) as a JAX-native runtime.
 
 Public API:
-    FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow
+    FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow,
+    TaskBatch, ResultBatch, BatchCoalescer
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -19,6 +20,13 @@ from .executor import Executor  # noqa: F401
 from .forwarder import ENDPOINT_POLICIES, EndpointRecord, Forwarder  # noqa: F401
 from .futures import TaskEnvelope, TaskFuture, TaskState  # noqa: F401
 from .heartbeat import HeartbeatMonitor, LatencyTracker  # noqa: F401
+from .interchange import (  # noqa: F401
+    BatchCoalescer,
+    ResultBatch,
+    TaskBatch,
+    iter_frames,
+    new_batch_id,
+)
 from .memoization import MemoCache  # noqa: F401
 from .provider import (  # noqa: F401
     LocalThreadProvider,

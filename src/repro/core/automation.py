@@ -11,7 +11,8 @@ from __future__ import annotations
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
+
 
 from .auth import Token
 from .futures import TaskFuture

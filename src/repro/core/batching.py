@@ -58,7 +58,6 @@ def stack_payloads(payloads: Sequence[Any]) -> Any:
     """
     if not payloads:
         raise ValueError("empty batch")
-    first = payloads[0]
 
     def stack_leaf(*leaves):
         if isinstance(leaves[0], np.ndarray) or hasattr(leaves[0], "__array__"):
@@ -108,7 +107,10 @@ class MicroBatcher:
     """Accumulates requests until `max_batch` or `max_wait_s`, then flushes.
 
     Used by the serving engine for continuous batching of decode requests —
-    the user-driven batching of Fig. 8 applied automatically on the server.
+    the same flush-on-size / flush-on-deadline policy that the task-flow
+    pipeline's :class:`repro.core.interchange.BatchCoalescer` applies between
+    tiers, but caller-clocked: the engine loop supplies the oldest-item age
+    and drains explicitly, so no internal timestamps are kept.
     """
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.002):

@@ -20,6 +20,7 @@ from typing import Callable, Dict, List, Optional
 from .executor import Executor
 from .futures import TaskEnvelope, TaskFuture, TaskState
 from .heartbeat import HeartbeatMonitor, LatencyTracker
+from .interchange import ResultBatch, TaskBatch
 from .provider import LocalThreadProvider, Provider, ProviderSpec
 from .registry import FunctionRegistry
 from .scheduler import Scheduler
@@ -120,13 +121,23 @@ class Endpoint:
 
     # -- submission --------------------------------------------------------
     def submit(self, env: TaskEnvelope, future: TaskFuture) -> None:
-        env.timestamps.endpoint_in = time.monotonic()
-        future.timestamps = env.timestamps
+        self.submit_batch(TaskBatch(envelopes=[env], futures=[future]))
+
+    def submit_batch(self, batch: TaskBatch) -> None:
+        """Accept a TaskBatch frame: one timestamp read, one futures-map
+        update, and one queue extension for the whole frame (vs. one of each
+        per task on the unbatched path)."""
+        now = time.monotonic()
+        for env, future in zip(batch.envelopes, batch.futures):
+            env.timestamps.endpoint_in = now
+            future.timestamps = env.timestamps
         with self._flock:
-            self.futures[env.task_id] = future
-        future.set_state(TaskState.QUEUED)
+            for env, future in zip(batch.envelopes, batch.futures):
+                self.futures[env.task_id] = future
+        for future in batch.futures:
+            future.set_state(TaskState.QUEUED)
         with self._qlock:
-            self._queue.append(env)
+            self._queue.extend(batch.envelopes)
 
     def queue_depth(self) -> int:
         with self._qlock:
@@ -159,11 +170,11 @@ class Endpoint:
             # 1) results (block briefly here — it is the latency-critical path)
             try:
                 res = self.result_queue.get(timeout=self.tick_s)
-                self._handle_result(res)
+                self._handle_frame(res)
                 # opportunistically drain the rest
                 while True:
                     try:
-                        self._handle_result(self.result_queue.get_nowait())
+                        self._handle_frame(self.result_queue.get_nowait())
                     except queue.Empty:
                         break
             except queue.Empty:
@@ -183,10 +194,23 @@ class Endpoint:
                 last_dispatch = now
                 self._dispatch()
 
-    def _handle_result(self, res: TaskResult) -> None:
+    def _handle_frame(self, frame) -> None:
+        """Result intake: executors drain their outboxes into ResultBatch
+        frames (futures resolved in one lock acquisition per frame); a bare
+        TaskResult (legacy producers) is a frame of one."""
+        if isinstance(frame, ResultBatch):
+            with self._flock:
+                futs = [self.futures.get(r.envelope.task_id) for r in frame]
+            for res, fut in zip(frame, futs):
+                self._handle_result(res, fut)
+        else:
+            self._handle_result(frame)
+
+    def _handle_result(self, res: TaskResult, fut: Optional[TaskFuture] = None) -> None:
         env = res.envelope
-        with self._flock:
-            fut = self.futures.get(env.task_id)
+        if fut is None:
+            with self._flock:
+                fut = self.futures.get(env.task_id)
         if fut is None:
             return
         if res.error is not None:
@@ -198,8 +222,12 @@ class Endpoint:
                 with self._qlock:
                     self._queue.appendleft(retry)
             else:
+                self._speculated.discard(env.speculative_of or env.task_id)
                 fut.set_exception(res.exception or RuntimeError(res.error))
             return
+        # prune straggler bookkeeping once either copy delivers (the set
+        # otherwise grows without bound under long-running speculation)
+        self._speculated.discard(env.speculative_of or env.task_id)
         won = fut.set_result(res.value)
         if won:
             self.completed += 1
@@ -213,38 +241,55 @@ class Endpoint:
                     pass
 
     def _dispatch(self) -> None:
+        """Capacity-pulled batch dispatch (paper §5.3/§5.5): each round picks
+        an executor for the queue head, then hands it a batch sized to its
+        ``free_capacity()`` advertisement (idle workers + prefetch) in one
+        pull — instead of re-running the scheduler and re-taking every lock
+        once per task."""
         while True:
             with self._qlock:
                 if not self._queue:
                     return
-                env = self._queue[0]
-            ex = self.scheduler.choose(self._executor_list(), env)
+                head = self._queue[0]
+            ex = self.scheduler.choose(self._executor_list(), head)
             if ex is None:
                 return
+            want = max(1, ex.free_capacity())
             with self._qlock:
-                if not self._queue or self._queue[0] is not env:
+                if not self._queue or self._queue[0] is not head:
                     continue
-                self._queue.popleft()
-            # queue-time memoization: a result computed while this task waited
-            # serves it without dispatch (paper Table 3: concurrent repeats)
-            if env.memoize and self.memo_probe is not None:
-                hit, value = self.memo_probe(env)
-                if hit:
-                    with self._flock:
-                        fut = self.futures.get(env.task_id)
-                    if fut is not None and fut.set_result(value, TaskState.MEMOIZED):
-                        self.completed += 1
-                    continue
-            env.timestamps.dispatched = time.monotonic()
+                chunk = [
+                    self._queue.popleft()
+                    for _ in range(min(want, len(self._queue)))
+                ]
+            now = time.monotonic()
+            ready: List[TaskEnvelope] = []
+            for env in chunk:
+                # queue-time memoization: a result computed while this task
+                # waited serves it without dispatch (paper Table 3)
+                if env.memoize and self.memo_probe is not None:
+                    hit, value = self.memo_probe(env)
+                    if hit:
+                        with self._flock:
+                            fut = self.futures.get(env.task_id)
+                        if fut is not None and fut.set_result(value, TaskState.MEMOIZED):
+                            self.completed += 1
+                        continue
+                env.timestamps.dispatched = now
+                ready.append(env)
+            if not ready:
+                continue
             with self._flock:
-                fut = self.futures.get(env.task_id)
-            if fut is not None:
-                fut.set_state(TaskState.DISPATCHED)
-            ex.submit(env)
+                futs = [self.futures.get(env.task_id) for env in ready]
+            for fut in futs:
+                if fut is not None:
+                    fut.set_state(TaskState.DISPATCHED)
+            ex.submit_batch(ready)
 
     def _watchdog(self) -> None:
         for eid in self.monitor.dead():
-            ex = self.executors.get(eid)
+            with self._exlock:
+                ex = self.executors.get(eid)
             self.monitor.suspend(eid)
             self.lost_executors += 1
             if ex is None:

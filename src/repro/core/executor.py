@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .futures import TaskEnvelope
 from .heartbeat import HeartbeatMonitor
+from .interchange import ResultBatch
 from .registry import FunctionRegistry
 from .warming import WarmPool
 from .worker import TaskResult, Worker
@@ -25,18 +26,20 @@ class Executor:
         self,
         executor_id: str,
         registry: FunctionRegistry,
-        result_queue: "queue.Queue[TaskResult]",
+        result_queue: "queue.Queue[ResultBatch]",
         n_workers: int = 4,
         prefetch: int = 0,
         warm_ttl_s: float = 300.0,
         monitor: Optional[HeartbeatMonitor] = None,
         heartbeat_interval_s: float = 2.0,
+        result_max_batch: int = 64,
     ):
         self.executor_id = executor_id
         self.registry = registry
         self.result_queue = result_queue
         self.n_workers = n_workers
         self.prefetch = prefetch
+        self.result_max_batch = result_max_batch
         self.warm_pool = WarmPool(ttl_s=warm_ttl_s)
         self.inbox: "queue.Queue[TaskEnvelope]" = queue.Queue()
         self.monitor = monitor
@@ -93,10 +96,17 @@ class Executor:
 
     # -- task intake ------------------------------------------------------
     def submit(self, env: TaskEnvelope) -> None:
-        env.executor_id = self.executor_id
+        self.submit_batch([env])
+
+    def submit_batch(self, envs: List[TaskEnvelope]) -> None:
+        """Accept a manager-pulled batch: one in-flight bookkeeping pass for
+        the whole batch; workers then steal tasks from the shared inbox."""
         with self._lock:
-            self.in_flight[env.task_id] = env
-        self.inbox.put(env)
+            for env in envs:
+                env.executor_id = self.executor_id
+                self.in_flight[env.task_id] = env
+        for env in envs:
+            self.inbox.put(env)
 
     def take_in_flight(self) -> List[TaskEnvelope]:
         """Called by the watchdog after this executor is declared dead."""
@@ -117,15 +127,25 @@ class Executor:
 
     # -- internals ----------------------------------------------------------
     def _forward_results(self) -> None:
+        """Drain the workers' outbox into ResultBatch frames: block for the
+        first result (latency), then sweep whatever else is ready (throughput)
+        so the manager pays one queue round-trip per frame, not per result."""
         while self._alive:
             try:
                 res = self._outbox.get(timeout=0.02)
             except queue.Empty:
                 continue
+            results = [res]
+            while len(results) < self.result_max_batch:
+                try:
+                    results.append(self._outbox.get_nowait())
+                except queue.Empty:
+                    break
             with self._lock:
-                self.in_flight.pop(res.envelope.task_id, None)
-                self.completed += 1
-            self.result_queue.put(res)
+                for r in results:
+                    self.in_flight.pop(r.envelope.task_id, None)
+                self.completed += len(results)
+            self.result_queue.put(ResultBatch(results=results))
 
     def _beat_loop(self) -> None:
         while self._alive:

@@ -27,11 +27,14 @@ import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .futures import TaskEnvelope, TaskFuture
+from .interchange import BatchCoalescer, iter_frames
 
 ENDPOINT_POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
+
+_Pair = Tuple[TaskEnvelope, TaskFuture]
 
 
 @dataclass
@@ -44,6 +47,9 @@ class EndpointRecord:
     routed: int = 0
     completed: int = 0
     dead: bool = False
+    # Per-endpoint submit queue: routed-but-undelivered (envelope, future)
+    # pairs waiting for the pump to coalesce them into a TaskBatch.
+    pending: Optional[BatchCoalescer] = None
 
 
 class Forwarder:
@@ -55,6 +61,8 @@ class Forwarder:
         liveness_threshold_s: float = 2.0,
         watchdog_interval_s: float = 0.05,
         failover: bool = True,
+        max_batch: int = 64,
+        max_delay_s: float = 0.0,
     ):
         if policy not in ENDPOINT_POLICIES:
             raise ValueError(
@@ -67,21 +75,40 @@ class Forwarder:
         self.failover = failover
         self.failovers = 0
         self.orphaned = 0  # tasks that died with no surviving endpoint
+        # Batching knobs: delivered frames hold at most `max_batch` tasks; with
+        # `max_delay_s > 0` routed tasks sit in per-endpoint submit queues and
+        # a pump thread coalesces them, otherwise delivery is synchronous
+        # (a lone submit() is simply a batch of one).
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.batches_delivered = 0
+        self.tasks_delivered = 0
 
         self._rng = random.Random(seed)
         self._records: Dict[str, EndpointRecord] = {}
         self._futures: Dict[str, TaskFuture] = {}
+        self._task_endpoint: Dict[str, str] = {}  # task_id -> endpoint_id (O(1) _on_done)
         self._lock = threading.RLock()
         self._alive = True
         self._watchdog = threading.Thread(
             target=self._watchdog_loop, name="forwarder/watchdog", daemon=True
         )
         self._watchdog.start()
+        self._pump_event = threading.Event()
+        self._pump: Optional[threading.Thread] = None
+        if self.max_delay_s > 0:
+            self._pump = threading.Thread(
+                target=self._pump_loop, name="forwarder/pump", daemon=True
+            )
+            self._pump.start()
 
     # -- endpoint registry ---------------------------------------------------
     def register(self, endpoint) -> str:
         with self._lock:
-            self._records[endpoint.endpoint_id] = EndpointRecord(endpoint=endpoint)
+            self._records[endpoint.endpoint_id] = EndpointRecord(
+                endpoint=endpoint,
+                pending=BatchCoalescer(self.max_batch, self.max_delay_s),
+            )
         return endpoint.endpoint_id
 
     def deregister(self, endpoint_id: str) -> None:
@@ -118,36 +145,41 @@ class Forwarder:
             live = self._live_records()
             if not live:
                 return None
-            if self.policy == "random":
-                rec = self._rng.choice(live)
-            elif self.policy == "least_outstanding":
-                rec = min(live, key=lambda r: (len(r.outstanding), r.routed))
-            elif self.policy == "latency_aware":
-                unmeasured = [r for r in live if r.latency_ewma is None]
-                if unmeasured:  # explore before exploiting
-                    rec = min(unmeasured, key=lambda r: (len(r.outstanding), r.routed))
-                else:
-                    # backlog-weighted EWMA: raw EWMA lags behind a burst, so
-                    # scale by outstanding/capacity to avoid dogpiling the
-                    # endpoint that last looked fastest
-                    def score(r):
-                        backlog = len(r.outstanding) / max(1, r.endpoint.capacity())
-                        return (r.latency_ewma * (1.0 + backlog), len(r.outstanding))
+            return self._choose_record(live, env).endpoint
 
-                    rec = min(live, key=score)
-            elif self.policy == "warm_affinity":
-                key = (env.function_id, env.container)
-                warm = [
-                    r for r in live
-                    if r.endpoint.has_warm(key)
-                    and len(r.outstanding) < max(1, r.endpoint.capacity())
-                ]
-                # saturated-warm spills to cold endpoints (which then warm up)
-                pool = warm or live
-                rec = min(pool, key=lambda r: (len(r.outstanding), r.routed))
-            else:  # pragma: no cover
-                raise AssertionError(self.policy)
-            return rec.endpoint
+    def _choose_record(
+        self, live: List[EndpointRecord], env: TaskEnvelope
+    ) -> EndpointRecord:
+        """Policy selection over a pre-computed live list (callers batching
+        many tasks pay the liveness scan once, not once per task). Must be
+        called with the lock held."""
+        if self.policy == "random":
+            return self._rng.choice(live)
+        if self.policy == "least_outstanding":
+            return min(live, key=lambda r: (len(r.outstanding), r.routed))
+        if self.policy == "latency_aware":
+            unmeasured = [r for r in live if r.latency_ewma is None]
+            if unmeasured:  # explore before exploiting
+                return min(unmeasured, key=lambda r: (len(r.outstanding), r.routed))
+            # backlog-weighted EWMA: raw EWMA lags behind a burst, so
+            # scale by outstanding/capacity to avoid dogpiling the
+            # endpoint that last looked fastest
+            def score(r):
+                backlog = len(r.outstanding) / max(1, r.endpoint.capacity())
+                return (r.latency_ewma * (1.0 + backlog), len(r.outstanding))
+
+            return min(live, key=score)
+        if self.policy == "warm_affinity":
+            key = (env.function_id, env.container)
+            warm = [
+                r for r in live
+                if r.endpoint.has_warm(key)
+                and len(r.outstanding) < max(1, r.endpoint.capacity())
+            ]
+            # saturated-warm spills to cold endpoints (which then warm up)
+            pool = warm or live
+            return min(pool, key=lambda r: (len(r.outstanding), r.routed))
+        raise AssertionError(self.policy)  # pragma: no cover
 
     def submit(
         self,
@@ -156,49 +188,138 @@ class Forwarder:
         endpoint_id: Optional[str] = None,
     ) -> str:
         """Route `env` to an endpoint (pinned when `endpoint_id` is given) and
-        track it until its future completes. Returns the chosen endpoint id."""
+        track it until its future completes. Returns the chosen endpoint id.
+        A single submit travels the batched pipe as a batch of one."""
+        return self.submit_many([(env, future)], endpoint_id=endpoint_id)[0]
+
+    def submit_many(
+        self,
+        pairs: Sequence[_Pair],
+        endpoint_id: Optional[str] = None,
+    ) -> List[str]:
+        """Route a batch of (envelope, future) pairs, amortizing registry locks
+        and delivering one TaskBatch frame per chosen endpoint. Returns the
+        chosen endpoint id for each pair, in order.
+
+        With ``max_delay_s > 0`` the routed pairs land in per-endpoint submit
+        queues and the pump delivers them (flush-on-size happens inline);
+        otherwise delivery is synchronous."""
+        pairs = list(pairs)
+        if not pairs:
+            return []
+        chosen: List[str] = []
+        deliveries: Dict[str, Tuple[EndpointRecord, List[_Pair]]] = {}
         with self._lock:
+            pinned: Optional[EndpointRecord] = None
             if endpoint_id is not None:
-                rec = self._records.get(endpoint_id)
-                if rec is None:
+                pinned = self._records.get(endpoint_id)
+                if pinned is None:
                     raise KeyError(f"unknown endpoint {endpoint_id!r}; register one first")
-                if not self._is_live(rec):
-                    rec = None  # pinned endpoint died: fall back to policy routing
+                if not self._is_live(pinned):
+                    pinned = None  # pinned endpoint died: fall back to policy routing
+            live: Optional[List[EndpointRecord]] = None
+            for env, future in pairs:
+                rec = pinned
+                if rec is None:
+                    if live is None:  # liveness scan paid once per batch
+                        live = self._live_records()
+                    if not live:
+                        raise RuntimeError(
+                            "no live endpoints registered with the forwarder"
+                        )
+                    rec = self._choose_record(live, env)
+                eid = rec.endpoint.endpoint_id
+                rec.outstanding[env.task_id] = env
+                rec.routed += 1
+                self._futures[env.task_id] = future
+                self._task_endpoint[env.task_id] = eid
+                chosen.append(eid)
+                deliveries.setdefault(eid, (rec, []))[1].append((env, future))
+        for env, future in pairs:
+            future.add_done_callback(lambda f, tid=env.task_id: self._on_done(tid, f))
+        # deliver via the record captured at routing time: a concurrent
+        # deregister() must not strand already-routed tasks undelivered
+        for rec, routed in deliveries.values():
+            if self.max_delay_s > 0:
+                for pair in routed:
+                    full = rec.pending.add(pair)
+                    if full:  # flush-on-size fires inline
+                        self._deliver(rec.endpoint, full)
+                self._pump_event.set()
             else:
-                rec = None
-            if rec is None:
-                live = self._live_records()
-                if not live:
-                    raise RuntimeError("no live endpoints registered with the forwarder")
-                ep = self.choose(env)
-                rec = self._records[ep.endpoint_id]
-            rec.outstanding[env.task_id] = env
-            rec.routed += 1
-            self._futures[env.task_id] = future
-            endpoint = rec.endpoint
-        future.add_done_callback(lambda f, tid=env.task_id: self._on_done(tid, f))
-        endpoint.submit(env, future)
-        return endpoint.endpoint_id
+                self._deliver(rec.endpoint, routed)
+        return chosen
+
+    def _deliver(self, endpoint, pairs: List[_Pair]) -> None:
+        """Hand routed pairs to `endpoint` as TaskBatch frames of at most
+        `max_batch` tasks (per-task submit for endpoints without a batch
+        surface, e.g. test fakes)."""
+        submit_batch = getattr(endpoint, "submit_batch", None)
+        for frame in iter_frames(pairs, self.max_batch):
+            with self._lock:
+                self.batches_delivered += 1
+                self.tasks_delivered += len(frame)
+            if submit_batch is not None:
+                submit_batch(frame)
+            else:
+                for env, future in frame.pairs():
+                    endpoint.submit(env, future)
+
+    # -- submit-queue pump ----------------------------------------------------
+    def _pump_loop(self) -> None:
+        interval = min(0.01, max(0.001, self.max_delay_s / 4))
+        while self._alive:
+            self._pump_event.wait(timeout=interval)
+            self._pump_event.clear()
+            try:
+                self.pump_once()
+            except Exception:  # pragma: no cover - pump must never die
+                pass
+
+    def pump_once(self, force: bool = False) -> int:
+        """Flush per-endpoint submit queues whose deadline has expired (all of
+        them when `force`). Returns the number of tasks delivered."""
+        now = time.monotonic()
+        flushes: List[Tuple[object, List[_Pair]]] = []
+        with self._lock:
+            for rec in self._records.values():
+                if rec.pending is None or not len(rec.pending):
+                    continue
+                if rec.dead:
+                    # late adds racing endpoint death: the watchdog already
+                    # failed these tasks over, so drop the stale pairs rather
+                    # than delivering to a corpse.
+                    rec.pending.flush()
+                    continue
+                batch = rec.pending.flush() if force else rec.pending.poll(now)
+                if batch:
+                    flushes.append((rec.endpoint, batch))
+        delivered = 0
+        for endpoint, batch in flushes:
+            self._deliver(endpoint, batch)
+            delivered += len(batch)
+        return delivered
 
     def _on_done(self, task_id: str, future: TaskFuture) -> None:
         with self._lock:
             self._futures.pop(task_id, None)
-            for rec in self._records.values():
-                if task_id in rec.outstanding:
-                    rec.outstanding.pop(task_id)
-                    if future.exception(0) is None:
-                        rec.completed += 1
-                        ts = future.timestamps
-                        if ts.result_ready and ts.endpoint_in:
-                            lat = max(0.0, ts.result_ready - ts.endpoint_in)
-                            if rec.latency_ewma is None:
-                                rec.latency_ewma = lat
-                            else:
-                                rec.latency_ewma = (
-                                    self.ewma_alpha * lat
-                                    + (1 - self.ewma_alpha) * rec.latency_ewma
-                                )
-                    break
+            eid = self._task_endpoint.pop(task_id, None)
+            rec = self._records.get(eid) if eid is not None else None
+            if rec is None or task_id not in rec.outstanding:
+                return
+            rec.outstanding.pop(task_id)
+            if future.exception(0) is None:
+                rec.completed += 1
+                ts = future.timestamps
+                if ts.result_ready and ts.endpoint_in:
+                    lat = max(0.0, ts.result_ready - ts.endpoint_in)
+                    if rec.latency_ewma is None:
+                        rec.latency_ewma = lat
+                    else:
+                        rec.latency_ewma = (
+                            self.ewma_alpha * lat
+                            + (1 - self.ewma_alpha) * rec.latency_ewma
+                        )
 
     # -- capacity-proportional sharding ---------------------------------------
     def shard(self, n: int) -> List[Tuple[str, int]]:
@@ -249,54 +370,76 @@ class Forwarder:
                 rec.dead = True
                 stranded = list(rec.outstanding.values())
                 rec.outstanding.clear()
+                if rec.pending is not None:
+                    # routed-but-undelivered pairs are already in `stranded`
+                    # (bookkeeping happens at routing time); just make sure
+                    # the pump never delivers them to the corpse.
+                    rec.pending.flush()
                 newly_dead.append((rec, stranded))
         dead_ids = []
         for rec, stranded in newly_dead:
             dead_ids.append(rec.endpoint.endpoint_id)
             if not self.failover:
                 continue
-            for env in stranded:
-                self._failover_task(env, rec)
+            self._failover_batch(stranded, rec)
         return dead_ids
 
-    def _failover_task(self, env: TaskEnvelope, source: EndpointRecord) -> None:
-        with self._lock:
-            future = self._futures.get(env.task_id)
-        if future is None or future.done():
-            return
-        env.executor_id = None
-        try:
+    def _failover_batch(
+        self, stranded: List[TaskEnvelope], source: EndpointRecord
+    ) -> None:
+        """Re-route every stranded task of a dead endpoint, then re-deliver
+        them as whole TaskBatch frames grouped by surviving endpoint (the
+        in-flight batch fails over intact rather than task-by-task)."""
+        deliveries: Dict[str, List[_Pair]] = {}
+        for env in stranded:
             with self._lock:
-                live = self._live_records()
-                if not live:
-                    raise RuntimeError("no surviving endpoint for failover")
-                ep = self.choose(env)
-                rec = self._records[ep.endpoint_id]
-                rec.outstanding[env.task_id] = env
-                rec.routed += 1
-            self.failovers += 1
-            ep.submit(env, future)
-        except RuntimeError as exc:
-            is_alive = getattr(source.endpoint, "is_alive", None)
-            if is_alive is not None and is_alive(None):
-                # merely stalled, not halted: leave the task with its
-                # endpoint — it still owns the future and can complete it.
-                # Re-check done under the lock: if it completed since the
-                # outstanding map was cleared, _on_done already ran and a
-                # re-add would leak a phantom entry forever.
+                future = self._futures.get(env.task_id)
+            if future is None or future.done():
+                continue
+            env.executor_id = None
+            try:
                 with self._lock:
-                    if not future.done():
-                        source.outstanding[env.task_id] = env
-                return
-            self.orphaned += 1
-            future.set_exception(
-                RuntimeError(f"task {env.task_id} lost: {exc}")
-            )
+                    live = self._live_records()
+                    if not live:
+                        raise RuntimeError("no surviving endpoint for failover")
+                    ep = self.choose(env)
+                    rec = self._records[ep.endpoint_id]
+                    rec.outstanding[env.task_id] = env
+                    rec.routed += 1
+                    self._task_endpoint[env.task_id] = ep.endpoint_id
+                self.failovers += 1
+                deliveries.setdefault(ep.endpoint_id, []).append((env, future))
+            except RuntimeError as exc:
+                is_alive = getattr(source.endpoint, "is_alive", None)
+                if is_alive is not None and is_alive(None):
+                    # merely stalled, not halted: leave the task with its
+                    # endpoint — it still owns the future and can complete it.
+                    # Re-check done under the lock: if it completed since the
+                    # outstanding map was cleared, _on_done already ran and a
+                    # re-add would leak a phantom entry forever.
+                    with self._lock:
+                        if not future.done():
+                            source.outstanding[env.task_id] = env
+                    continue
+                self.orphaned += 1
+                future.set_exception(
+                    RuntimeError(f"task {env.task_id} lost: {exc}")
+                )
+        for eid, routed in deliveries.items():
+            with self._lock:
+                rec = self._records.get(eid)
+            if rec is not None:
+                self._deliver(rec.endpoint, routed)
 
     # -- lifecycle / stats ----------------------------------------------------
     def shutdown(self) -> None:
+        if self._pump is not None:
+            self.pump_once(force=True)  # don't strand queued tasks
         self._alive = False
+        self._pump_event.set()
         self._watchdog.join(timeout=2.0)
+        if self._pump is not None:
+            self._pump.join(timeout=2.0)
 
     def stats(self) -> dict:
         with self._lock:
@@ -304,11 +447,21 @@ class Forwarder:
                 "policy": self.policy,
                 "failovers": self.failovers,
                 "orphaned": self.orphaned,
+                "max_batch": self.max_batch,
+                "max_delay_s": self.max_delay_s,
+                "batches_delivered": self.batches_delivered,
+                "tasks_delivered": self.tasks_delivered,
+                "mean_batch_size": (
+                    self.tasks_delivered / self.batches_delivered
+                    if self.batches_delivered
+                    else 0.0
+                ),
                 "endpoints": {
                     eid: {
                         "routed": rec.routed,
                         "completed": rec.completed,
                         "outstanding": len(rec.outstanding),
+                        "pending": len(rec.pending) if rec.pending is not None else 0,
                         "latency_ewma_s": rec.latency_ewma,
                         "dead": rec.dead,
                         "capacity": rec.endpoint.capacity() if not rec.dead else 0,

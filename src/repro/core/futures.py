@@ -77,6 +77,9 @@ class TaskEnvelope:
     timestamps: Timestamps = field(default_factory=Timestamps)
     # Filled in by the endpoint:
     executor_id: Optional[str] = None
+    # Frame identity: set when this task travels inside a TaskBatch. A retry
+    # is a fresh single-task attempt, so clone_for_retry() drops it.
+    batch_id: Optional[str] = None
 
     def clone_for_retry(self) -> "TaskEnvelope":
         env = TaskEnvelope(

@@ -18,7 +18,8 @@ from __future__ import annotations
 import abc
 import os
 import textwrap
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
 from typing import Callable, Dict, List, Optional
 
 

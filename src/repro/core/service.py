@@ -92,6 +92,62 @@ class FunctionService:
         return ep
 
     # -- invocation ---------------------------------------------------------
+    def _submit_tasks(
+        self,
+        function_id: str,
+        payloads: Sequence[Any],
+        endpoint_id: Optional[str] = None,
+        container: str = "default",
+        memoize: bool = False,
+        max_retries: int = 2,
+        token: Optional[Token] = None,
+    ) -> List[TaskFuture]:
+        """Build one future per payload and submit the non-memoized remainder
+        to the Forwarder as ONE batch. Auth, registry lookup, and routing
+        locks are paid once per batch instead of once per task; a single
+        ``run()`` is simply a batch of one."""
+        t_submit = time.monotonic()
+        identity = self._identity(token, auth_mod.SCOPE_INVOKE)
+        rf = self.registry.get(function_id)
+        if not self.registry.authorized(function_id, identity):
+            raise auth_mod.AuthError(f"{identity} may not invoke {rf.name}")
+
+        wire = rf.metadata.get("pass_through", False)
+        memoizable = memoize and rf.deterministic and not wire
+        t_service_in = time.monotonic()
+        futures: List[TaskFuture] = []
+        pairs = []
+        for payload in payloads:
+            future = TaskFuture(new_task_id())
+            future.timestamps.client_submit = t_submit
+            future.timestamps.service_in = t_service_in
+            futures.append(future)
+
+            digest = None
+            if memoizable:
+                digest = serializer.payload_hash(payload)
+                hit, value = self.memo.get(function_id, digest)
+                if hit:
+                    future.set_result(value, state=TaskState.MEMOIZED)
+                    continue
+
+            env = TaskEnvelope(
+                task_id=future.task_id,
+                function_id=function_id,
+                payload=payload if wire else serializer.packb(payload),
+                container=container,
+                memoize=digest is not None,
+                max_retries=max_retries,
+            )
+            env.timestamps.client_submit = future.timestamps.client_submit
+            env.timestamps.service_in = future.timestamps.service_in
+            if digest is not None:
+                env.__dict__["_memo_digest"] = digest
+            pairs.append((env, future))
+        if pairs:
+            self.forwarder.submit_many(pairs, endpoint_id=endpoint_id)
+        return futures
+
     def run(
         self,
         function_id: str,
@@ -104,40 +160,15 @@ class FunctionService:
         token: Optional[Token] = None,
         timeout: Optional[float] = None,
     ) -> Any:
-        t_submit = time.monotonic()
-        identity = self._identity(token, auth_mod.SCOPE_INVOKE)
-        rf = self.registry.get(function_id)
-        if not self.registry.authorized(function_id, identity):
-            raise auth_mod.AuthError(f"{identity} may not invoke {rf.name}")
-
-        wire = rf.metadata.get("pass_through", False)
-        payload_bytes: Any = payload if wire else serializer.packb(payload)
-
-        future = TaskFuture(new_task_id())
-        future.timestamps.client_submit = t_submit
-        future.timestamps.service_in = time.monotonic()
-
-        digest = None
-        if memoize and rf.deterministic and not wire:
-            digest = serializer.payload_hash(payload)
-            hit, value = self.memo.get(function_id, digest)
-            if hit:
-                future.set_result(value, state=TaskState.MEMOIZED)
-                return future.result(timeout) if sync else future
-
-        env = TaskEnvelope(
-            task_id=future.task_id,
-            function_id=function_id,
-            payload=payload_bytes,
+        future = self._submit_tasks(
+            function_id,
+            [payload],
+            endpoint_id,
             container=container,
-            memoize=memoize and digest is not None,
+            memoize=memoize,
             max_retries=max_retries,
-        )
-        env.timestamps.client_submit = future.timestamps.client_submit
-        env.timestamps.service_in = future.timestamps.service_in
-        if digest is not None:
-            env.__dict__["_memo_digest"] = digest
-        self.forwarder.submit(env, future, endpoint_id=endpoint_id)
+            token=token,
+        )[0]
         return future.result(timeout) if sync else future
 
     def batch_run(
@@ -150,9 +181,16 @@ class FunctionService:
     ) -> List[TaskFuture]:
         """N invocations. With user_batched=True the payloads are stacked into
         ONE invocation (paper §5.5 'user-driven batching', Fig. 8) and the
-        stacked result is split back into N per-request futures."""
+        stacked result is split back into N per-request futures. Otherwise the
+        N tasks travel as one TaskBatch through the Forwarder, amortizing
+        auth, registry lookups, and routing locks across the batch."""
         if not user_batched:
-            return [self.run(function_id, p, endpoint_id, **kwargs) for p in payloads]
+            sync = kwargs.pop("sync", False)
+            timeout = kwargs.pop("timeout", None)
+            futures = self._submit_tasks(function_id, list(payloads), endpoint_id, **kwargs)
+            if sync:
+                return [f.result(timeout) for f in futures]
+            return futures
         stacked = stack_payloads(list(payloads))
         inner = self.run(function_id, stacked, endpoint_id, **kwargs)
         outs = [TaskFuture(f"{inner.task_id}/{i}") for i in range(len(payloads))]
@@ -181,15 +219,20 @@ class FunctionService:
             and not kwargs.get("user_batched")
             and self.forwarder.live_count() > 1
         ):
-            kwargs.pop("user_batched", None)  # falsy here; run() doesn't take it
+            kwargs.pop("user_batched", None)  # falsy here; _submit_tasks doesn't take it
             futs: List[TaskFuture] = []
             start = 0
             for eid, count in self.forwarder.shard(len(payloads)):
-                for p in payloads[start : start + count]:
-                    futs.append(self.run(function_id, p, endpoint_id=eid, **kwargs))
+                if count:  # each shard travels as one pinned batch
+                    futs.extend(
+                        self._submit_tasks(
+                            function_id, payloads[start : start + count],
+                            endpoint_id=eid, **kwargs,
+                        )
+                    )
                 start += count
-            for p in payloads[start:]:  # defensive: shard() should cover all
-                futs.append(self.run(function_id, p, **kwargs))
+            if start < len(payloads):  # defensive: shard() should cover all
+                futs.extend(self._submit_tasks(function_id, payloads[start:], **kwargs))
             return [f.result(timeout) for f in futs]
         futs = self.batch_run(function_id, payloads, endpoint_id, **kwargs)
         return [f.result(timeout) for f in futs]

@@ -13,7 +13,8 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
 from typing import Any, Callable, Optional, Tuple
 
 

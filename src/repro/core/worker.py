@@ -30,6 +30,7 @@ class TaskResult:
     worker_id: str = ""
     cold_start: bool = False
     compile_time_s: float = 0.0
+    batch_id: Optional[str] = None    # TaskBatch frame this task arrived in
 
 
 class _JaxExecutable:
@@ -126,7 +127,7 @@ class Worker(threading.Thread):
             env.timestamps.exec_end = time.monotonic()
             return TaskResult(
                 envelope=env, value=value, worker_id=self.worker_id,
-                cold_start=cold, compile_time_s=dt,
+                cold_start=cold, compile_time_s=dt, batch_id=env.batch_id,
             )
         except BaseException as exc:  # noqa: BLE001 — report, don't die
             env.timestamps.exec_end = time.monotonic()
@@ -135,4 +136,5 @@ class Worker(threading.Thread):
                 error=f"{type(exc).__name__}: {exc}\n{traceback.format_exc(limit=5)}",
                 exception=exc,
                 worker_id=self.worker_id,
+                batch_id=env.batch_id,
             )

@@ -1,7 +1,6 @@
 """Dispatching wrapper: Pallas SSD scan on TPU, jnp reference elsewhere."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 

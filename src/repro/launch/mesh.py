@@ -7,7 +7,9 @@ model=16) = 512 chips; batch dims shard jointly over ("pod", "data").
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
+
+
 
 import jax
 import numpy as np

@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core import FunctionService

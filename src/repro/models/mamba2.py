@@ -128,7 +128,6 @@ def mamba2_block(
 
     state = None
     if return_state:
-        conv_state = jnp.concatenate([xin, Bm, Cm], axis=-1)  # pre-conv? see decode note
         # conv cache must hold the last K-1 *pre-activation inputs* to the conv
         # (i.e. the raw projections). Recompute them cheaply from the tail:
         raw_tail = jnp.concatenate(
@@ -140,7 +139,6 @@ def mamba2_block(
             axis=-1,
         )
         state = {"conv": raw_tail, "ssm": final_state}
-        del conv_state
     return out, state
 
 

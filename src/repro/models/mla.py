@@ -7,7 +7,8 @@ as MQA with a single (kv_lora + rope)-wide kv head — the cache stores only
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
+
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +67,6 @@ def _queries(p, x, cfg, positions):
 
 
 def _latent_kv(p, x, cfg, positions):
-    m = cfg.mla
     c_kv = _norm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"], cfg.norm_eps)
     k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
     if positions is not None:

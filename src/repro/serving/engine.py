@@ -13,7 +13,9 @@ import threading
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
+
+
 
 import jax
 import jax.numpy as jnp

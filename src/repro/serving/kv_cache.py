@@ -5,7 +5,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ModelConfig
 

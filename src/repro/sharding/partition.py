@@ -19,7 +19,8 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
+
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -8,7 +8,8 @@ and dispatches.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
+
 
 import jax
 import jax.numpy as jnp

@@ -9,11 +9,13 @@ model applied to training: the "function" happens to span a pod.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional
+from dataclasses import dataclass
+
+from typing import Dict, List, Optional
+
+
 
 import jax
-import numpy as np
 
 from ..checkpoint.checkpointer import Checkpointer
 from ..core.service import FunctionService

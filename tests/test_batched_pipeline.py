@@ -1,0 +1,344 @@
+"""Batched task-flow pipeline: TaskBatch/ResultBatch framing, the
+flush-on-size / flush-on-deadline coalescer, batch submission through the
+Forwarder, capacity-pulled endpoint dispatch, and whole-batch failover."""
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on clean environments
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (
+    BatchCoalescer,
+    Forwarder,
+    FunctionService,
+    ResultBatch,
+    TaskBatch,
+    TaskEnvelope,
+    TaskFuture,
+    iter_frames,
+)
+
+
+# ---------------------------------------------------------------- coalescer
+def test_coalescer_flush_on_size():
+    c = BatchCoalescer(max_batch=3, max_delay_s=60.0)
+    assert c.add("a") is None
+    assert c.add("b") is None
+    assert c.add("c") == ["a", "b", "c"]  # third add fills the frame
+    assert len(c) == 0
+    assert c.poll() is None
+
+
+def test_coalescer_flush_on_deadline():
+    c = BatchCoalescer(max_batch=100, max_delay_s=0.5)
+    c.add("a", now=10.0)
+    c.add("b", now=10.1)
+    assert c.poll(now=10.4) is None          # oldest is 0.4s old: not yet
+    assert c.poll(now=10.6) == ["a", "b"]    # 0.6s old: deadline expired
+    assert c.poll(now=99.0) is None          # nothing pending
+
+
+def test_coalescer_zero_delay_flushes_immediately():
+    c = BatchCoalescer(max_batch=100, max_delay_s=0.0)
+    c.add(1)
+    assert c.poll() == [1]
+
+
+def test_coalescer_flush_drains_everything():
+    c = BatchCoalescer(max_batch=100, max_delay_s=60.0)
+    for i in range(5):
+        c.add(i)
+    assert c.flush() == [0, 1, 2, 3, 4]
+    assert c.flush() == []
+
+
+def test_coalescer_rejects_bad_knobs():
+    with pytest.raises(ValueError):
+        BatchCoalescer(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchCoalescer(max_delay_s=-1.0)
+
+
+@given(
+    ops=st.lists(
+        st.one_of(st.just("poll"), st.integers(min_value=0, max_value=10)),
+        max_size=200,
+    ),
+    max_batch=st.integers(min_value=1, max_value=7),
+    max_delay_s=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+)
+@settings(max_examples=200, deadline=None)
+def test_coalescer_never_drops_or_duplicates(ops, max_batch, max_delay_s):
+    """Under any interleaving of adds, deadline polls, and an advancing clock,
+    every added item comes back exactly once, in insertion order."""
+    c = BatchCoalescer(max_batch=max_batch, max_delay_s=max_delay_s)
+    clock = 0.0
+    added, flushed = [], []
+    for seq, op in enumerate(ops):
+        if op == "poll":
+            clock += max_delay_s / 3 if max_delay_s else 0.25
+            out = c.poll(now=clock)
+            if out:
+                flushed.extend(out)
+        else:
+            item = (seq, op)
+            added.append(item)
+            out = c.add(item, now=clock)
+            if out:
+                flushed.extend(out)
+    flushed.extend(c.flush())
+    assert flushed == added  # exactly once each, order preserved
+
+
+# ---------------------------------------------------------------- framing
+def _env(i, fn="f"):
+    return TaskEnvelope(task_id=f"t{i}", function_id=fn, payload=b"")
+
+
+def test_iter_frames_slices_to_max_batch():
+    pairs = [(_env(i), TaskFuture(f"t{i}")) for i in range(10)]
+    frames = list(iter_frames(pairs, max_batch=4))
+    assert [len(f) for f in frames] == [4, 4, 2]
+    seen = [env.task_id for f in frames for env in f]
+    assert seen == [f"t{i}" for i in range(10)]
+    # each envelope is stamped with its frame's identity
+    for frame in frames:
+        assert all(env.batch_id == frame.batch_id for env in frame)
+
+
+def test_task_batch_stamps_batch_id():
+    envs = [_env(i) for i in range(3)]
+    batch = TaskBatch(envelopes=envs, futures=[TaskFuture(e.task_id) for e in envs])
+    assert len(batch) == 3
+    assert all(e.batch_id == batch.batch_id for e in batch)
+
+
+# ------------------------------------------------- forwarder batch submission
+class BatchFakeEndpoint:
+    """Endpoint-shaped fake that records delivered TaskBatch frames."""
+
+    def __init__(self, eid, capacity=4, alive=True):
+        self.endpoint_id = eid
+        self._capacity = capacity
+        self._alive = alive
+        self.batches = []
+
+    def is_alive(self, max_heartbeat_age_s=None):
+        return self._alive
+
+    def capacity(self):
+        return self._capacity
+
+    def has_warm(self, key):
+        return False
+
+    def submit_batch(self, batch):
+        self.batches.append(batch)
+
+    def submit(self, env, future):  # pragma: no cover - batch surface preferred
+        raise AssertionError("batched forwarder must use submit_batch")
+
+
+@pytest.fixture()
+def fwd_factory():
+    created = []
+
+    def make(endpoints, **kwargs):
+        kwargs.setdefault("policy", "least_outstanding")
+        f = Forwarder(seed=0, **kwargs)
+        for ep in endpoints:
+            f.register(ep)
+        created.append(f)
+        return f
+
+    yield make
+    for f in created:
+        f.shutdown()
+
+
+def _pairs(n, start=0):
+    return [(_env(i + start), TaskFuture(f"t{i + start}")) for i in range(n)]
+
+
+def test_submit_many_delivers_one_frame_per_endpoint(fwd_factory):
+    ep = BatchFakeEndpoint("a")
+    fwd = fwd_factory([ep], max_batch=64)
+    chosen = fwd.submit_many(_pairs(10))
+    assert chosen == ["a"] * 10
+    assert len(ep.batches) == 1 and len(ep.batches[0]) == 10
+
+
+def test_submit_many_respects_max_batch_framing(fwd_factory):
+    ep = BatchFakeEndpoint("a")
+    fwd = fwd_factory([ep], max_batch=4)
+    fwd.submit_many(_pairs(10), endpoint_id="a")
+    assert [len(b) for b in ep.batches] == [4, 4, 2]
+    stats = fwd.stats()
+    assert stats["batches_delivered"] == 3 and stats["tasks_delivered"] == 10
+
+
+def test_submit_many_pinned_and_unknown_endpoint(fwd_factory):
+    a, b = BatchFakeEndpoint("a"), BatchFakeEndpoint("b")
+    fwd = fwd_factory([a, b])
+    assert fwd.submit_many(_pairs(3), endpoint_id="b") == ["b"] * 3
+    assert not a.batches and len(b.batches) == 1
+    with pytest.raises(KeyError):
+        fwd.submit_many(_pairs(1, start=90), endpoint_id="nope")
+
+
+def test_submit_many_spreads_by_policy(fwd_factory):
+    a, b = BatchFakeEndpoint("a"), BatchFakeEndpoint("b")
+    fwd = fwd_factory([a, b])
+    chosen = fwd.submit_many(_pairs(8))  # futures never complete
+    assert sorted(chosen) == ["a"] * 4 + ["b"] * 4  # least_outstanding spreads
+    assert sum(len(x) for x in a.batches) == 4
+    assert sum(len(x) for x in b.batches) == 4
+
+
+def test_deferred_pump_coalesces_on_deadline(fwd_factory):
+    ep = BatchFakeEndpoint("a")
+    fwd = fwd_factory([ep], max_batch=1000, max_delay_s=0.04)
+    for env, fut in _pairs(5):
+        fwd.submit(env, fut)
+    assert not ep.batches  # inside the coalescing window: nothing delivered yet
+    deadline = time.monotonic() + 2
+    while not ep.batches and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert len(ep.batches) == 1 and len(ep.batches[0]) == 5  # one frame for all
+
+
+def test_deferred_flush_on_size_is_inline(fwd_factory):
+    ep = BatchFakeEndpoint("a")
+    fwd = fwd_factory([ep], max_batch=3, max_delay_s=30.0)
+    fwd.submit_many(_pairs(3))
+    assert len(ep.batches) == 1 and len(ep.batches[0]) == 3  # no pump wait
+    fwd.submit_many(_pairs(2, start=10))
+    assert fwd.stats()["endpoints"]["a"]["pending"] == 2  # below size: queued
+    assert fwd.pump_once(force=True) == 2
+
+
+# ------------------------------------------------- end-to-end batched path
+def _ident(doc):
+    return doc
+
+
+def _sleepy(doc):
+    time.sleep(doc.get("t", 0.03))
+    return {"i": doc.get("i", -1)}
+
+
+def test_batched_path_matches_per_task_results_and_order():
+    svc = FunctionService()
+    svc.make_endpoint("cmp", n_executors=2, workers_per_executor=2, prefetch=4)
+    fid = svc.register_function(_ident)
+    payloads = [{"i": i} for i in range(40)]
+
+    per_task = [svc.run(fid, p) for p in payloads]
+    batched = svc.batch_run(fid, payloads)
+    assert [f.result(30)["i"] for f in per_task] == list(range(40))
+    assert [f.result(30)["i"] for f in batched] == list(range(40))
+    assert svc.forwarder.stats()["mean_batch_size"] > 1.0
+    svc.shutdown()
+
+
+def test_batched_sync_returns_results():
+    svc = FunctionService()
+    svc.make_endpoint("sy", n_executors=1, workers_per_executor=2)
+    fid = svc.register_function(_ident)
+    outs = svc.batch_run(fid, [{"i": i} for i in range(5)], sync=True, timeout=30)
+    assert [o["i"] for o in outs] == list(range(5))
+    svc.shutdown()
+
+
+def test_batched_memoization_served_without_submission():
+    svc = FunctionService()
+    svc.make_endpoint("bm", n_executors=1, workers_per_executor=1)
+    calls = {"n": 0}
+
+    def counted(doc):
+        calls["n"] += 1
+        return {"v": doc["x"]}
+
+    fid = svc.register_function(counted)
+    svc.run(fid, {"x": 1}, memoize=True).result(20)
+    futs = svc.batch_run(fid, [{"x": 1}] * 6, memoize=True)
+    assert [f.result(20)["v"] for f in futs] == [1] * 6
+    assert calls["n"] == 1  # every repeat served from the memo cache
+    svc.shutdown()
+
+
+def test_in_flight_batch_fails_over_intact():
+    """Kill an endpoint holding a whole pinned batch: every task of the frame
+    is re-delivered (as batches) to the survivor and completes."""
+    svc = FunctionService(policy="least_outstanding")
+    svc.forwarder.liveness_threshold_s = 0.2
+    svc.forwarder.watchdog_interval_s = 0.02
+    ep_a = svc.make_endpoint("bfa", n_executors=1, workers_per_executor=2)
+    svc.make_endpoint("bfb", n_executors=1, workers_per_executor=2)
+    fid = svc.register_function(_sleepy)
+    futs = svc.batch_run(
+        fid, [{"i": i, "t": 0.08} for i in range(12)], endpoint_id=ep_a.endpoint_id
+    )
+    time.sleep(0.05)
+    ep_a.kill()
+    results = [f.result(30) for f in futs]
+    assert sorted(r["i"] for r in results) == list(range(12))
+    assert svc.forwarder.failovers > 0
+    # failover re-delivery also travelled in frames, not task-by-task
+    stats = svc.forwarder.stats()
+    assert stats["batches_delivered"] < stats["tasks_delivered"]
+    svc.shutdown()
+
+
+def test_batch_queued_in_pump_fails_over_on_death():
+    """Tasks routed to a dead endpoint but still waiting in its submit queue
+    must not be delivered to the corpse — they fail over with the rest."""
+    svc = FunctionService(
+        policy="least_outstanding",
+        forwarder=Forwarder(max_batch=1000, max_delay_s=0.5, seed=0),
+    )
+    svc.forwarder.liveness_threshold_s = 0.15
+    svc.forwarder.watchdog_interval_s = 0.02
+    ep_a = svc.make_endpoint("pqa", n_executors=1, workers_per_executor=2)
+    svc.make_endpoint("pqb", n_executors=1, workers_per_executor=2)
+    fid = svc.register_function(_sleepy)
+    futs = svc.batch_run(
+        fid, [{"i": i, "t": 0.0} for i in range(6)], endpoint_id=ep_a.endpoint_id
+    )
+    ep_a.kill()  # dies while the batch sits in the per-endpoint submit queue
+    results = [f.result(30) for f in futs]
+    assert sorted(r["i"] for r in results) == list(range(6))
+    svc.shutdown()
+
+
+def test_speculation_bookkeeping_pruned_after_completion():
+    svc = FunctionService()
+    ep = svc.make_endpoint("spp", n_executors=2, workers_per_executor=1,
+                           heartbeat_interval_s=0.05, speculation=True,
+                           speculation_multiplier=2.0)
+    fid = svc.register_function(_sleepy)
+    [svc.run(fid, {"i": i, "t": 0.01}).result(10) for i in range(10)]
+    fut = svc.run(fid, {"i": 99, "t": 0.5})  # straggler: 50x baseline
+    assert fut.result(20)["i"] == 99
+    deadline = time.monotonic() + 5
+    while ep._speculated and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert not ep._speculated  # entries pruned once either copy delivers
+    svc.shutdown()
+
+
+def test_executor_outbox_drains_as_result_batches():
+    svc = FunctionService()
+    ep = svc.make_endpoint("rb", n_executors=1, workers_per_executor=4, prefetch=8)
+    frames = []
+    real_put = ep.result_queue.put
+    ep.result_queue.put = lambda item: (frames.append(item), real_put(item))[1]
+    fid = svc.register_function(_ident)
+    futs = svc.batch_run(fid, [{"i": i} for i in range(32)])
+    [f.result(30) for f in futs]
+    assert frames and all(isinstance(f, ResultBatch) for f in frames)
+    assert sum(len(f) for f in frames) >= 32
+    svc.shutdown()

@@ -1,5 +1,4 @@
 """Unit + property tests for core FaaS components."""
-import threading
 import time
 
 import numpy as np

@@ -33,7 +33,6 @@ def test_decode_matches_full_forward(arch, key):
     ref = np.asarray(full_logits(model, params, batch))
 
     if cfg.family == "vlm":
-        n_text = S - cfg.n_patches
         pre_tokens = batch["tokens"][:, :PREFILL - cfg.n_patches]
         pre_batch = dict(batch, tokens=pre_tokens)
         decode_tokens = batch["tokens"][:, PREFILL - cfg.n_patches:]

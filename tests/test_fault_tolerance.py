@@ -47,8 +47,8 @@ def test_elastic_replacement_restores_capacity():
 
 def test_task_retries_exhausted_raises():
     svc = FunctionService()
-    ep = svc.make_endpoint("rx", n_executors=1, workers_per_executor=1,
-                           heartbeat_interval_s=0.05)
+    svc.make_endpoint("rx", n_executors=1, workers_per_executor=1,
+                      heartbeat_interval_s=0.05)
 
     def flaky(doc):
         raise RuntimeError("always fails")
@@ -79,7 +79,7 @@ def test_retry_succeeds_after_transient_failure():
 
 def test_speculative_duplicate_first_result_wins():
     svc = FunctionService()
-    ep = svc.make_endpoint("sp", n_executors=2, workers_per_executor=1,
+    svc.make_endpoint("sp", n_executors=2, workers_per_executor=1,
                            heartbeat_interval_s=0.05, speculation=True,
                            speculation_multiplier=2.0)
     fid = svc.register_function(_sleepy)

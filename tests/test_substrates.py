@@ -1,5 +1,4 @@
 """Optimizer, checkpointer, partitioner, MoE dispatch, data pipeline."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,8 @@ except ImportError:  # property-based cases skip without the dev extra
 
 from repro.configs import get_reduced
 from repro.configs.base import MoEConfig
-from repro.data.pipeline import Prefetcher, synthetic_batch, token_stream
+from repro.data.pipeline import Prefetcher, synthetic_batch
+
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.models import moe as moe_mod
 from repro.sharding import partition
