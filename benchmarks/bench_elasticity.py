@@ -1,0 +1,187 @@
+"""Managed elasticity under bursty load (paper §5.4; funcX follow-ups).
+
+An elastic endpoint starts at ``min_blocks``, absorbs a burst that demands
+several times its capacity, and must (a) scale out in proportional steps
+while the burst lasts and (b) scale back in to ``min_blocks`` once idle and
+the cool-down expires. A sampler thread records blocks-over-time so the
+bench JSON artifact captures the whole elasticity envelope, alongside the
+burst's p50/p99 client-observed latency.
+
+Rows:
+    elasticity/burst            p50/p99 latency + peak blocks during the burst
+    elasticity/scale_in         time from burst-drain to min_blocks
+    elasticity/blocks_over_time the sampled `ms:blocks` trajectory
+    elasticity/metrics          fabric counters from MetricsRegistry.snapshot()
+
+Also writes ``benchmarks/results/elasticity.json`` (timeline + summary),
+uploaded by CI's bench-smoke job.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_elasticity --smoke
+(or directly:    python benchmarks/bench_elasticity.py --smoke)
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+if __package__ in (None, ""):  # direct-file run: python benchmarks/bench_elasticity.py
+    import sys
+
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(os.path.dirname(_here), "src"))
+    from common import emit, percentile, scaled, sleeper
+else:
+    from .common import emit, percentile, scaled, sleeper
+
+from repro.core import FunctionService
+
+N_BURST = scaled(400, 120)
+TASK_S = 0.02
+MIN_BLOCKS = 1
+MAX_BLOCKS = 6
+WORKERS_PER_BLOCK = 2
+COOLDOWN_S = 0.3
+SAMPLE_S = 0.02
+
+
+class _BlockSampler(threading.Thread):
+    """Samples the endpoint's accepting-block count on a fixed cadence."""
+
+    def __init__(self, endpoint, period_s: float = SAMPLE_S):
+        super().__init__(name="block-sampler", daemon=True)
+        self.endpoint = endpoint
+        self.period_s = period_s
+        self.samples: list[tuple[float, int]] = []
+        self._halt = threading.Event()  # NB: Thread owns a private _stop
+        self._t0 = time.monotonic()
+
+    def run(self) -> None:
+        while not self._halt.is_set():
+            blocks = sum(
+                1 for e in self.endpoint._executor_list() if e.accepting()
+            )
+            self.samples.append((time.monotonic() - self._t0, blocks))
+            self._halt.wait(self.period_s)
+
+    def stop(self) -> None:
+        self._halt.set()
+        self.join(timeout=2.0)
+
+
+def run():
+    rows = []
+    svc = FunctionService()
+    ep = svc.make_endpoint(
+        "elastic",
+        n_executors=MIN_BLOCKS,
+        workers_per_executor=WORKERS_PER_BLOCK,
+        max_executors=MAX_BLOCKS,
+        elastic=True,
+        heartbeat_interval_s=0.05,
+        scale_cooldown_s=COOLDOWN_S,
+        prefetch=2,
+    )
+    fid = svc.register_function(sleeper, name="sleeper")
+
+    sampler = _BlockSampler(ep)
+    sampler.start()
+
+    # -- burst: demand ~N*TASK_S seconds of work against 1 block ------------
+    t0 = time.monotonic()
+    futs = [svc.run(fid, {"i": i, "t": TASK_S}) for i in range(N_BURST)]
+    lats = []
+    for f in futs:
+        f.result(120)
+        ts = f.timestamps
+        lats.append(ts.result_ready - ts.client_submit)
+    burst_dt = time.monotonic() - t0
+
+    # -- quiet: wait for scale-in back to min_blocks -------------------------
+    t_drain = time.monotonic()
+    deadline = t_drain + 30.0
+    final_blocks = None
+    while time.monotonic() < deadline:
+        blocks = sum(1 for e in ep._executor_list() if e.accepting())
+        if blocks <= MIN_BLOCKS:
+            final_blocks = blocks
+            break
+        time.sleep(0.02)
+    scale_in_s = time.monotonic() - t_drain
+    sampler.stop()
+
+    peak = max(b for _, b in sampler.samples)
+    final = sampler.samples[-1][1] if final_blocks is None else final_blocks
+    assert peak > MIN_BLOCKS, f"burst never scaled out (peak={peak})"
+    assert final == MIN_BLOCKS, f"did not scale in to min_blocks (final={final})"
+
+    snap = svc.metrics.snapshot()
+    submitted = snap["counters"].get("service.tasks_submitted", 0)
+    completed = snap["counters"].get("service.tasks_completed", 0)
+    e2e = snap["histograms"].get("service.e2e_latency_s", {})
+    assert submitted >= N_BURST and completed >= N_BURST and e2e.get("count", 0) > 0
+
+    rows.append(emit(
+        "elasticity/burst",
+        burst_dt / N_BURST * 1e6,
+        f"{N_BURST/burst_dt:.0f} req/s p50={percentile(lats, 50)*1e3:.1f}ms "
+        f"p99={percentile(lats, 99)*1e3:.1f}ms peak_blocks={peak}",
+    ))
+    rows.append(emit(
+        "elasticity/scale_in",
+        scale_in_s * 1e6,
+        f"blocks {peak}->{final} (min_blocks={MIN_BLOCKS}) in {scale_in_s:.2f}s "
+        f"after cooldown={COOLDOWN_S}s",
+    ))
+    timeline = " ".join(f"{int(t*1000)}:{b}" for t, b in sampler.samples)
+    rows.append(emit("elasticity/blocks_over_time", 0.0, timeline))
+    rows.append(emit(
+        "elasticity/metrics",
+        0.0,
+        f"submitted={submitted} completed={completed} "
+        f"e2e_p95={e2e.get('p95')}s scale_out={ep.autoscaler.scale_out_events} "
+        f"scale_in={ep.autoscaler.scale_in_events}",
+    ))
+
+    out = os.path.join(os.path.dirname(__file__), "results", "elasticity.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "burst_tasks": N_BURST,
+                "task_s": TASK_S,
+                "min_blocks": MIN_BLOCKS,
+                "max_blocks": MAX_BLOCKS,
+                "peak_blocks": peak,
+                "final_blocks": final,
+                "scale_in_s": round(scale_in_s, 3),
+                "p50_ms": round(percentile(lats, 50) * 1e3, 2),
+                "p99_ms": round(percentile(lats, 99) * 1e3, 2),
+                "blocks_over_time": [
+                    {"t_ms": int(t * 1000), "blocks": b} for t, b in sampler.samples
+                ],
+                "autoscaler": ep.autoscaler.stats(),
+            },
+            f,
+            indent=1,
+        )
+
+    svc.shutdown()
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI smoke runs")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        # re-evaluate module-level sizes chosen before the env var was set
+        N_BURST = scaled(400, 120)
+    print("name,us_per_call,derived")
+    run()

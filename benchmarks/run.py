@@ -17,6 +17,7 @@ SUITES = (
     "scaling",        # Fig. 6 strong + weak
     "throughput",     # §6.2.3
     "federation",     # multi-endpoint fabric: policies x endpoint counts
+    "elasticity",     # §5.4 managed elasticity: blocks-over-time under burst
     "fault",          # Fig. 7
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)

@@ -6,6 +6,11 @@ A science workload fanned across three heterogeneous endpoints — a laptop,
 a campus cluster, and a (simulated-WAN) supercomputer — through the central
 Forwarder. Shows capacity-proportional map() sharding, latency-aware
 routing, and failover when a whole site goes down mid-campaign.
+
+Expected output: per-site routing shares (the big site taking the largest
+map() shard, latency-aware routing shifting traffic off the slow WAN site),
+then a mid-campaign site kill with every stranded task failed over — the
+final tally shows all results delivered and a non-zero failover count.
 """
 import time
 

@@ -5,6 +5,11 @@
 Registers a Python function, invokes it synchronously and asynchronously on a
 local endpoint, shows memoization, user-driven batching, and the Fig.-5
 latency breakdown.
+
+Expected output: the sync/async invocation results, a memoized re-invocation
+returning in ~0 ms with state MEMOIZED, the batched fan-out results, and a
+per-invocation t_c/t_w/t_m/t_e latency table (t_e dominating for the sleep
+task).
 """
 import time
 

@@ -2,7 +2,7 @@
 
 Public API:
     FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow,
-    TaskBatch, ResultBatch, BatchCoalescer
+    TaskBatch, ResultBatch, BatchCoalescer, MetricsRegistry, Autoscaler
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -14,6 +14,15 @@ from .auth import (  # noqa: F401
     TokenAuthority,
 )
 from .automation import ActionStep, Flow, FlowRun  # noqa: F401
+from .autoscaler import (  # noqa: F401
+    Autoscaler,
+    LatencySLOPolicy,
+    ScalingDecision,
+    ScalingObservation,
+    ScalingPolicy,
+    TargetQueueDepthPolicy,
+    make_policy,
+)
 from .batching import MicroBatcher, stack_payloads, unstack_results  # noqa: F401
 from .endpoint import Endpoint  # noqa: F401
 from .executor import Executor  # noqa: F401
@@ -28,6 +37,15 @@ from .interchange import (  # noqa: F401
     new_batch_id,
 )
 from .memoization import MemoCache  # noqa: F401
+from .metrics import (  # noqa: F401
+    LATENCY_BUCKETS_S,
+    SIZE_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    merged_snapshot,
+)
 from .provider import (  # noqa: F401
     LocalThreadProvider,
     Provider,

@@ -17,10 +17,12 @@ import uuid
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
+from .autoscaler import Autoscaler, ScalingObservation, ScalingPolicy
 from .executor import Executor
 from .futures import TaskEnvelope, TaskFuture, TaskState
 from .heartbeat import HeartbeatMonitor, LatencyTracker
 from .interchange import ResultBatch, TaskBatch
+from .metrics import MetricsRegistry
 from .provider import LocalThreadProvider, Provider, ProviderSpec
 from .registry import FunctionRegistry
 from .scheduler import Scheduler
@@ -48,6 +50,12 @@ class Endpoint:
         dispatch_interval_s: float = 0.0,
         result_hook: Optional[Callable[[TaskEnvelope, TaskResult], None]] = None,
         memo_probe: Optional[Callable[[TaskEnvelope], tuple]] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        scaling_policy: "str | ScalingPolicy" = "queue_depth",
+        scale_cooldown_s: float = 30.0,
+        scale_step_fraction: float = 0.5,
+        target_tasks_per_worker: float = 2.0,
+        latency_slo_s: float = 1.0,
     ):
         self.endpoint_id = f"ep-{uuid.uuid4().hex[:8]}"
         self.name = name
@@ -68,6 +76,7 @@ class Endpoint:
         self.result_hook = result_hook
         self.memo_probe = memo_probe
         self.tracker = LatencyTracker()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
         self.result_queue: "queue.Queue[TaskResult]" = queue.Queue()
         self._queue: deque[TaskEnvelope] = deque()
@@ -75,6 +84,7 @@ class Endpoint:
         self.futures: Dict[str, TaskFuture] = {}
         self._flock = threading.Lock()
         self.executors: Dict[str, Executor] = {}
+        self._block_of: Dict[str, str] = {}  # executor_id -> provider block_id
         self._exlock = threading.Lock()  # guards executors against fabric-thread readers
         self._speculated: set[str] = set()
         self.completed = 0
@@ -84,6 +94,7 @@ class Endpoint:
         if provider is None:
             provider = LocalThreadProvider(
                 ProviderSpec(
+                    min_blocks=min(1, n_executors),
                     init_blocks=n_executors,
                     max_blocks=max(max_executors, n_executors),
                     workers_per_block=workers_per_executor,
@@ -93,6 +104,21 @@ class Endpoint:
         if isinstance(provider, LocalThreadProvider):
             provider.bind_factory(self._make_executor)
         provider.scale_out(n_executors)
+        # All block-count changes flow through the autoscaler: policy ticks at
+        # heartbeat cadence when `elastic`, and the watchdog's replacement
+        # path (which releases the dead block before requesting a new one, so
+        # repeated failures can never exceed ProviderSpec.max_blocks).
+        self.autoscaler = Autoscaler(
+            provider=self.provider,
+            host=self,
+            policy=scaling_policy,
+            cooldown_s=scale_cooldown_s,
+            step_fraction=scale_step_fraction,
+            metrics=self.metrics,
+            name=self.endpoint_id,  # unique gauge label, matching forwarder tier
+            target_tasks_per_worker=target_tasks_per_worker,
+            latency_slo_s=latency_slo_s,
+        )
 
         self._alive = True
         self.last_heartbeat = time.monotonic()
@@ -110,10 +136,22 @@ class Endpoint:
             warm_ttl_s=self.warm_ttl_s,
             monitor=self.monitor,
             heartbeat_interval_s=self.heartbeat_interval_s,
+            metrics=self.metrics,
         )
         with self._exlock:
             self.executors[ex.executor_id] = ex
+            self._block_of[ex.executor_id] = block_id
         return ex
+
+    def bind_metrics(self, metrics: MetricsRegistry) -> None:
+        """Adopt a fabric-wide registry (called when this endpoint registers
+        with a FunctionService) so service-, endpoint-, and executor-tier
+        telemetry share one snapshot surface."""
+        self.metrics = metrics
+        self.autoscaler.metrics = metrics
+        for ex in self._executor_list():
+            ex.metrics = metrics
+            ex.warm_pool.metrics = metrics
 
     def _executor_list(self) -> List[Executor]:
         with self._exlock:
@@ -185,9 +223,18 @@ class Endpoint:
                 last_watchdog = now
                 self._watchdog()
                 if self.elastic:
-                    self._autoscale()
+                    self.autoscaler.tick()
                 if self.speculation:
                     self._speculate()
+                # labeled by endpoint_id, not name: names are user-chosen and
+                # same-named endpoints must not merge into one gauge series
+                labels = {"endpoint": self.endpoint_id}
+                self.metrics.gauge("endpoint.queue_depth", labels).set(
+                    self.queue_depth()
+                )
+                self.metrics.gauge("endpoint.executors_live", labels).set(
+                    sum(1 for e in self._executor_list() if e.accepting())
+                )
             # 3) dispatch (rate-limited when simulating a WAN RTT)
             now = time.monotonic()
             if now - last_dispatch >= self.dispatch_interval_s:
@@ -216,6 +263,7 @@ class Endpoint:
         if res.error is not None:
             if env.retries < env.max_retries:
                 self.requeued += 1
+                self.metrics.counter("endpoint.tasks_requeued").inc()
                 retry = env.clone_for_retry()
                 with self._flock:
                     self.futures[retry.task_id] = fut
@@ -231,6 +279,7 @@ class Endpoint:
         won = fut.set_result(res.value)
         if won:
             self.completed += 1
+            self.metrics.counter("endpoint.tasks_completed").inc()
             ts = env.timestamps
             if ts.exec_end and ts.endpoint_in:
                 self.tracker.record(ts.exec_end - ts.endpoint_in)
@@ -263,6 +312,7 @@ class Endpoint:
                     for _ in range(min(want, len(self._queue)))
                 ]
             now = time.monotonic()
+            dispatch_latency = self.metrics.histogram("endpoint.dispatch_latency_s")
             ready: List[TaskEnvelope] = []
             for env in chunk:
                 # queue-time memoization: a result computed while this task
@@ -276,6 +326,8 @@ class Endpoint:
                             self.completed += 1
                         continue
                 env.timestamps.dispatched = now
+                if env.timestamps.endpoint_in:
+                    dispatch_latency.observe(now - env.timestamps.endpoint_in)
                 ready.append(env)
             if not ready:
                 continue
@@ -292,6 +344,7 @@ class Endpoint:
                 ex = self.executors.get(eid)
             self.monitor.suspend(eid)
             self.lost_executors += 1
+            self.metrics.counter("endpoint.executors_lost").inc()
             if ex is None:
                 continue
             ex.suspend()
@@ -319,14 +372,62 @@ class Endpoint:
                     fut.set_exception(RuntimeError(f"task lost with executor {eid}"))
             with self._exlock:
                 del self.executors[eid]
+                dead_block = self._block_of.pop(eid, None)
             if self.elastic:
-                self.provider.scale_out(1)  # replacement block
+                # Replacement flows through the autoscaler: the dead block is
+                # released from the provider before a new one is requested, so
+                # repeated failures cannot leak blocks past max_blocks.
+                self.autoscaler.replace_block(dead_block)
+            elif dead_block is not None:
+                # Non-elastic: no replacement, but forget the corpse so the
+                # provider's block count stays honest. release(), not
+                # scale_in(): a false-positive death must leave the executor
+                # running so its late result can still resolve the future.
+                self.provider.release([dead_block])
 
-    def _autoscale(self) -> None:
-        capacity = sum(e.n_workers for e in self._executor_list() if e.accepting())
-        depth = self.queue_depth()
-        if depth > 2 * max(capacity, 1):
-            self.provider.scale_out(1)
+    # -- autoscaler host protocol (see core/autoscaler.py) -------------------
+    def observe(self) -> ScalingObservation:
+        """One heartbeat's load observation for the scaling policy."""
+        executors = self._executor_list()
+        accepting = [e for e in executors if e.accepting()]
+        return ScalingObservation(
+            queue_depth=self.queue_depth(),
+            # in_flight covers inbox-queued tasks too (submit_batch books a
+            # task before the worker pulls it), so count it alone
+            outstanding=sum(len(e.in_flight) for e in accepting),
+            blocks=len(accepting),
+            workers_per_block=self.workers_per_executor,
+            p95_latency_s=self.tracker.p95(),
+        )
+
+    def select_idle_block(self) -> Optional[tuple]:
+        """A (block_id, executor) scale-in candidate with no queued or
+        in-flight work, or None. The autoscaler suspends it, re-verifies
+        emptiness, and either releases the block or resumes the executor."""
+        with self._exlock:
+            items = list(self.executors.items())
+            block_of = dict(self._block_of)
+        for eid, ex in items:
+            if not ex.accepting():
+                continue
+            if len(ex.in_flight) or ex.inbox.qsize():
+                continue
+            block_id = block_of.get(eid)
+            if block_id is not None:
+                return block_id, ex
+        return None
+
+    def release_block(self, block_id: str) -> None:
+        """Drop the executor backing `block_id` from the dispatch tables and
+        release the block at the provider (which shuts the executor down)."""
+        with self._exlock:
+            eid = next(
+                (e for e, b in self._block_of.items() if b == block_id), None
+            )
+            if eid is not None:
+                self.executors.pop(eid, None)
+                self._block_of.pop(eid, None)
+        self.provider.scale_in([block_id])
 
     def _speculate(self) -> None:
         p95 = self.tracker.p95()
@@ -404,4 +505,5 @@ class Endpoint:
             "lost_executors": self.lost_executors,
             "executors": {ex.executor_id: ex.stats() for ex in self._executor_list()},
             "p95_latency_s": self.tracker.p95(),
+            "autoscaler": self.autoscaler.stats(),
         }

@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Tuple
 from .futures import TaskEnvelope
 from .heartbeat import HeartbeatMonitor
 from .interchange import ResultBatch
+from .metrics import MetricsRegistry
 from .registry import FunctionRegistry
 from .warming import WarmPool
 from .worker import TaskResult, Worker
@@ -33,6 +34,7 @@ class Executor:
         monitor: Optional[HeartbeatMonitor] = None,
         heartbeat_interval_s: float = 2.0,
         result_max_batch: int = 64,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.executor_id = executor_id
         self.registry = registry
@@ -40,7 +42,8 @@ class Executor:
         self.n_workers = n_workers
         self.prefetch = prefetch
         self.result_max_batch = result_max_batch
-        self.warm_pool = WarmPool(ttl_s=warm_ttl_s)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.warm_pool = WarmPool(ttl_s=warm_ttl_s, metrics=self.metrics)
         self.inbox: "queue.Queue[TaskEnvelope]" = queue.Queue()
         self.monitor = monitor
         self.heartbeat_interval_s = heartbeat_interval_s
@@ -145,6 +148,12 @@ class Executor:
                 for r in results:
                     self.in_flight.pop(r.envelope.task_id, None)
                 self.completed += len(results)
+            self.metrics.counter("executor.tasks_executed").inc(len(results))
+            service_time = self.metrics.histogram("executor.service_time_s")
+            for r in results:
+                ts = r.envelope.timestamps
+                if ts.exec_end and ts.exec_start:
+                    service_time.observe(ts.exec_end - ts.exec_start)
             self.result_queue.put(ResultBatch(results=results))
 
     def _beat_loop(self) -> None:
@@ -162,15 +171,25 @@ class Executor:
 
     def suspend(self) -> None:
         """Paper: 'suspend executors to prevent further tasks being scheduled
-        to failed executors'."""
+        to failed executors'. Also the first step of an autoscaler drain."""
         self._suspended = True
+
+    def resume(self) -> None:
+        """Undo a suspend — the autoscaler resumes an executor when work
+        raced its drain attempt (a suspended-but-live executor is healthy)."""
+        self._suspended = False
 
     def shutdown(self) -> None:
         self._alive = False
         for w in self.workers:
             w.stop()
         for w in self.workers:
-            w.join(timeout=1.0)
+            # A worker mid-execution is left to finish and exit on its own
+            # (daemon thread): joining it would stall the caller — e.g. the
+            # endpoint manager loop releasing a dead block — long enough for
+            # the fabric watchdog to declare the whole endpoint dead.
+            if not w.busy:
+                w.join(timeout=1.0)
         if self.monitor is not None:
             self.monitor.deregister(self.executor_id)
 

@@ -26,30 +26,77 @@ from __future__ import annotations
 import random
 import threading
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .futures import TaskEnvelope, TaskFuture
 from .interchange import BatchCoalescer, iter_frames
+from .metrics import SIZE_BUCKETS, MetricsRegistry
 
 ENDPOINT_POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
 
 _Pair = Tuple[TaskEnvelope, TaskFuture]
 
 
-@dataclass
 class EndpointRecord:
-    """Forwarder-side bookkeeping for one registered endpoint."""
+    """Forwarder-side bookkeeping for one registered endpoint.
 
-    endpoint: object                     # Endpoint-shaped: see FakeEndpoint in tests
-    outstanding: Dict[str, TaskEnvelope] = field(default_factory=dict)
-    latency_ewma: Optional[float] = None  # observed endpoint-tier latency (s)
-    routed: int = 0
-    completed: int = 0
-    dead: bool = False
-    # Per-endpoint submit queue: routed-but-undelivered (envelope, future)
-    # pairs waiting for the pump to coalesce them into a TaskBatch.
-    pending: Optional[BatchCoalescer] = None
+    The two routing signals — observed latency EWMA and outstanding task
+    count — are backed by the shared metrics registry (gauges
+    ``forwarder.endpoint_latency_ewma_s`` / ``forwarder.endpoint_outstanding``
+    labeled by endpoint), not private fields: ``latency_aware`` routing, the
+    autoscaler, and external telemetry all consume the same numbers."""
+
+    def __init__(
+        self,
+        endpoint,                         # Endpoint-shaped: see FakeEndpoint in tests
+        pending: Optional[BatchCoalescer] = None,
+        metrics: Optional[MetricsRegistry] = None,
+    ):
+        self.endpoint = endpoint
+        self.outstanding: Dict[str, TaskEnvelope] = {}
+        self.routed = 0
+        self.completed = 0
+        self.dead = False
+        # Per-endpoint submit queue: routed-but-undelivered (envelope, future)
+        # pairs waiting for the pump to coalesce them into a TaskBatch.
+        self.pending = pending
+        metrics = metrics if metrics is not None else MetricsRegistry()
+        self._bind_gauges(metrics, reset=True)
+
+    def _bind_gauges(self, metrics: MetricsRegistry, reset: bool) -> None:
+        labels = {"endpoint": self.endpoint.endpoint_id}
+        self._ewma_gauge = metrics.gauge(
+            "forwarder.endpoint_latency_ewma_s", labels
+        )
+        self._outstanding_gauge = metrics.gauge(
+            "forwarder.endpoint_outstanding", labels
+        )
+        if reset:
+            # a fresh record means fresh measurement state: a deregistered
+            # endpoint re-joining must be explored again by latency_aware
+            # routing, not shunned on an arbitrarily stale EWMA
+            self._ewma_gauge.set(None)
+            self._outstanding_gauge.set(0)
+
+    def rebind_metrics(self, metrics: MetricsRegistry) -> None:
+        """Move this record's gauges to another registry, carrying the
+        current values over."""
+        ewma, outstanding = self._ewma_gauge.value, self._outstanding_gauge.value
+        self._bind_gauges(metrics, reset=False)
+        self._ewma_gauge.set(ewma)
+        self._outstanding_gauge.set(outstanding if outstanding is not None else 0)
+
+    @property
+    def latency_ewma(self) -> Optional[float]:
+        """Observed endpoint-tier latency EWMA (s); None until measured."""
+        return self._ewma_gauge.value
+
+    @latency_ewma.setter
+    def latency_ewma(self, v: Optional[float]) -> None:
+        self._ewma_gauge.set(v)
+
+    def sync_outstanding(self) -> None:
+        self._outstanding_gauge.set(len(self.outstanding))
 
 
 class Forwarder:
@@ -63,12 +110,14 @@ class Forwarder:
         failover: bool = True,
         max_batch: int = 64,
         max_delay_s: float = 0.0,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if policy not in ENDPOINT_POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}; choose from {ENDPOINT_POLICIES}"
             )
         self.policy = policy
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.ewma_alpha = ewma_alpha
         self.liveness_threshold_s = liveness_threshold_s
         self.watchdog_interval_s = watchdog_interval_s
@@ -108,12 +157,29 @@ class Forwarder:
             self._records[endpoint.endpoint_id] = EndpointRecord(
                 endpoint=endpoint,
                 pending=BatchCoalescer(self.max_batch, self.max_delay_s),
+                metrics=self.metrics,
             )
         return endpoint.endpoint_id
 
     def deregister(self, endpoint_id: str) -> None:
         with self._lock:
             self._records.pop(endpoint_id, None)
+
+    def rebind_metrics(self, metrics: MetricsRegistry) -> None:
+        """Adopt another registry: future forwarder-tier recordings land in
+        `metrics`, every registered record's gauges move over with their
+        current values, and already-registered endpoints are re-bound too.
+        Counters/histograms accumulated before adoption stay in the old
+        registry (adoption normally happens at FunctionService construction,
+        before any traffic). Keeps fabric telemetry from splitting across
+        registries when a pre-built forwarder is handed to a service."""
+        with self._lock:
+            self.metrics = metrics
+            records = list(self._records.values())
+        for rec in records:
+            rec.rebind_metrics(metrics)
+            if hasattr(rec.endpoint, "bind_metrics"):
+                rec.endpoint.bind_metrics(metrics)
 
     def endpoint_ids(self) -> List[str]:
         with self._lock:
@@ -218,6 +284,7 @@ class Forwarder:
                 if not self._is_live(pinned):
                     pinned = None  # pinned endpoint died: fall back to policy routing
             live: Optional[List[EndpointRecord]] = None
+            decisions = 0
             for env, future in pairs:
                 rec = pinned
                 if rec is None:
@@ -228,6 +295,7 @@ class Forwarder:
                             "no live endpoints registered with the forwarder"
                         )
                     rec = self._choose_record(live, env)
+                    decisions += 1
                 eid = rec.endpoint.endpoint_id
                 rec.outstanding[env.task_id] = env
                 rec.routed += 1
@@ -235,6 +303,13 @@ class Forwarder:
                 self._task_endpoint[env.task_id] = eid
                 chosen.append(eid)
                 deliveries.setdefault(eid, (rec, []))[1].append((env, future))
+            self.metrics.counter("forwarder.tasks_routed").inc(len(pairs))
+            if decisions:  # one bulk inc, not one per task inside the lock
+                self.metrics.counter(
+                    "forwarder.routing_decisions", {"policy": self.policy}
+                ).inc(decisions)
+            for rec, _ in deliveries.values():
+                rec.sync_outstanding()
         for env, future in pairs:
             future.add_done_callback(lambda f, tid=env.task_id: self._on_done(tid, f))
         # deliver via the record captured at routing time: a concurrent
@@ -259,6 +334,10 @@ class Forwarder:
             with self._lock:
                 self.batches_delivered += 1
                 self.tasks_delivered += len(frame)
+            self.metrics.counter("forwarder.batches_delivered").inc()
+            self.metrics.histogram(
+                "forwarder.batch_size", buckets=SIZE_BUCKETS
+            ).observe(len(frame))
             if submit_batch is not None:
                 submit_batch(frame)
             else:
@@ -308,6 +387,7 @@ class Forwarder:
             if rec is None or task_id not in rec.outstanding:
                 return
             rec.outstanding.pop(task_id)
+            rec.sync_outstanding()
             if future.exception(0) is None:
                 rec.completed += 1
                 ts = future.timestamps
@@ -370,12 +450,16 @@ class Forwarder:
                 rec.dead = True
                 stranded = list(rec.outstanding.values())
                 rec.outstanding.clear()
+                rec.sync_outstanding()
                 if rec.pending is not None:
                     # routed-but-undelivered pairs are already in `stranded`
                     # (bookkeeping happens at routing time); just make sure
                     # the pump never delivers them to the corpse.
                     rec.pending.flush()
                 newly_dead.append((rec, stranded))
+            self.metrics.gauge("forwarder.endpoints_live").set(
+                len(self._live_records())
+            )
         dead_ids = []
         for rec, stranded in newly_dead:
             dead_ids.append(rec.endpoint.endpoint_id)
@@ -406,8 +490,10 @@ class Forwarder:
                     rec = self._records[ep.endpoint_id]
                     rec.outstanding[env.task_id] = env
                     rec.routed += 1
+                    rec.sync_outstanding()
                     self._task_endpoint[env.task_id] = ep.endpoint_id
                 self.failovers += 1
+                self.metrics.counter("forwarder.failovers").inc()
                 deliveries.setdefault(ep.endpoint_id, []).append((env, future))
             except RuntimeError as exc:
                 is_alive = getattr(source.endpoint, "is_alive", None)
@@ -420,8 +506,10 @@ class Forwarder:
                     with self._lock:
                         if not future.done():
                             source.outstanding[env.task_id] = env
+                            source.sync_outstanding()
                     continue
                 self.orphaned += 1
+                self.metrics.counter("forwarder.orphaned").inc()
                 future.set_exception(
                     RuntimeError(f"task {env.task_id} lost: {exc}")
                 )

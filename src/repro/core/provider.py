@@ -50,6 +50,14 @@ class Provider(abc.ABC):
     def scale_in(self, block_ids: List[str]) -> None:
         """Release blocks."""
 
+    def release(self, block_ids: List[str]) -> None:
+        """Forget blocks without tearing them down — dead-block bookkeeping.
+        A watchdog-declared-dead executor may be a false positive (heartbeat
+        stall): its threads must stay up to deliver late results, but the
+        block must stop counting against ``max_blocks`` so replacements fit."""
+        for bid in block_ids:
+            self._blocks.pop(bid, None)
+
     def status(self) -> dict:
         return {"blocks": len(self._blocks), "spec": self.spec}
 

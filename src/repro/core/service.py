@@ -30,6 +30,7 @@ from .endpoint import Endpoint
 from .forwarder import Forwarder
 from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
 from .memoization import MemoCache
+from .metrics import MetricsRegistry
 from .registry import FunctionRegistry
 from .worker import TaskResult
 
@@ -41,11 +42,24 @@ class FunctionService:
         memo_entries: int = 4096,
         policy: str = "least_outstanding",
         forwarder: Optional[Forwarder] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.registry = FunctionRegistry()
         self.memo = MemoCache(max_entries=memo_entries)
         self.authority = authority
-        self.forwarder = forwarder if forwarder is not None else Forwarder(policy=policy)
+        # One MetricsRegistry per fabric: the forwarder and every registered
+        # endpoint (and its executors/warm pools) bind to it, so
+        # ``self.metrics.snapshot()`` is the whole-fabric telemetry surface.
+        if forwarder is not None:
+            self.forwarder = forwarder
+            self.metrics = metrics if metrics is not None else forwarder.metrics
+            # unify unconditionally: record gauges keep their values, and any
+            # endpoint registered before adoption binds to the fabric
+            # registry — telemetry must never split across registries
+            forwarder.rebind_metrics(self.metrics)
+        else:
+            self.metrics = metrics if metrics is not None else MetricsRegistry()
+            self.forwarder = Forwarder(policy=policy, metrics=self.metrics)
 
     @property
     def endpoints(self) -> Dict[str, Endpoint]:
@@ -82,11 +96,14 @@ class FunctionService:
         self._identity(token, auth_mod.SCOPE_REGISTER_ENDPOINT)
         endpoint.result_hook = self._on_result
         endpoint.memo_probe = self._memo_probe
+        if hasattr(endpoint, "bind_metrics"):
+            endpoint.bind_metrics(self.metrics)
         return self.forwarder.register(endpoint)
 
     def make_endpoint(self, name: str, token: Optional[Token] = None,
                       **kwargs: Any) -> Endpoint:
         """Convenience: construct an Endpoint bound to this service's registry."""
+        kwargs.setdefault("metrics", self.metrics)
         ep = Endpoint(name=name, registry=self.registry, result_hook=self._on_result, **kwargs)
         self.register_endpoint(ep, token=token)
         return ep
@@ -115,12 +132,14 @@ class FunctionService:
         wire = rf.metadata.get("pass_through", False)
         memoizable = memoize and rf.deterministic and not wire
         t_service_in = time.monotonic()
+        self.metrics.counter("service.tasks_submitted").inc(len(payloads))
         futures: List[TaskFuture] = []
         pairs = []
         for payload in payloads:
             future = TaskFuture(new_task_id())
             future.timestamps.client_submit = t_submit
             future.timestamps.service_in = t_service_in
+            future.add_done_callback(self._observe_completion)
             futures.append(future)
 
             digest = None
@@ -128,6 +147,7 @@ class FunctionService:
                 digest = serializer.payload_hash(payload)
                 hit, value = self.memo.get(function_id, digest)
                 if hit:
+                    self.metrics.counter("service.memo_hits").inc()
                     future.set_result(value, state=TaskState.MEMOIZED)
                     continue
 
@@ -247,6 +267,19 @@ class FunctionService:
         return future.result(timeout)
 
     # -- hooks -----------------------------------------------------------------
+    def _observe_completion(self, future: TaskFuture) -> None:
+        """Done-callback on every future built by this service: end-to-end
+        success/failure counts and the client-observed latency histogram."""
+        if future.exception(0) is None:
+            self.metrics.counter("service.tasks_completed").inc()
+            ts = future.timestamps
+            if ts.result_ready and ts.client_submit:
+                self.metrics.histogram("service.e2e_latency_s").observe(
+                    ts.result_ready - ts.client_submit
+                )
+        else:
+            self.metrics.counter("service.tasks_failed").inc()
+
     def _on_result(self, env: TaskEnvelope, res: TaskResult) -> None:
         digest = env.__dict__.get("_memo_digest")
         if env.memoize and digest is not None and res.error is None:
@@ -272,4 +305,5 @@ class FunctionService:
             "endpoints": {eid: ep.stats() for eid, ep in self.endpoints.items()},
             "forwarder": self.forwarder.stats(),
             "memo": self.memo.stats(),
+            "metrics": self.metrics.snapshot(),
         }

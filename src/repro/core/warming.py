@@ -17,6 +17,8 @@ from dataclasses import dataclass
 
 from typing import Any, Callable, Optional, Tuple
 
+from .metrics import MetricsRegistry
+
 
 @dataclass
 class WarmEntry:
@@ -30,9 +32,15 @@ class WarmEntry:
 class WarmPool:
     """TTL + LRU cache of compiled executables."""
 
-    def __init__(self, ttl_s: float = 300.0, max_entries: int = 256):
+    def __init__(
+        self,
+        ttl_s: float = 300.0,
+        max_entries: int = 256,
+        metrics: Optional[MetricsRegistry] = None,
+    ):
         self.ttl_s = ttl_s
         self.max_entries = max_entries
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._lock = threading.Lock()
         self._entries: OrderedDict[Tuple, WarmEntry] = OrderedDict()
         self.cold_starts = 0
@@ -59,10 +67,12 @@ class WarmPool:
                 entry.uses += 1
                 self._entries.move_to_end(key)
                 self.warm_hits += 1
+                self.metrics.counter("warming.warm_hits").inc()
                 return entry.executable, False, 0.0
             if entry is not None:  # expired
                 del self._entries[key]
                 self.evictions += 1
+                self.metrics.counter("warming.evictions").inc()
 
         t0 = time.monotonic()
         executable = compile_fn()
@@ -77,6 +87,9 @@ class WarmPool:
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)
                 self.evictions += 1
+                self.metrics.counter("warming.evictions").inc()
+        self.metrics.counter("warming.cold_starts").inc()
+        self.metrics.histogram("warming.compile_time_s").observe(dt)
         return executable, True, dt
 
     def warm(self, key: Tuple, compile_fn: Callable[[], Any]) -> float:
@@ -92,7 +105,9 @@ class WarmPool:
             for k in expired:
                 del self._entries[k]
             self.evictions += len(expired)
-            return len(expired)
+        if expired:
+            self.metrics.counter("warming.evictions").inc(len(expired))
+        return len(expired)
 
     def contains(self, key: Tuple) -> bool:
         with self._lock:

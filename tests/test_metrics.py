@@ -1,0 +1,226 @@
+"""Telemetry layer: instrument semantics, registry behaviour, and the
+fabric-wide snapshot produced by a real FunctionService run."""
+import threading
+
+from repro.core import (
+    SIZE_BUCKETS,
+    FunctionService,
+    Histogram,
+    MetricsRegistry,
+    merged_snapshot,
+)
+
+
+# ---------------------------------------------------------------- instruments
+def test_counter_and_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("service.tasks_submitted")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = reg.gauge("endpoint.queue_depth")
+    assert g.value is None  # unset != zero (unmeasured endpoints explore first)
+    g.set(3)
+    g.inc()
+    g.dec(2)
+    assert g.value == 2.0
+
+
+def test_counter_thread_safety():
+    reg = MetricsRegistry()
+
+    def worker():
+        for _ in range(1000):
+            reg.counter("c").inc()
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert reg.counter("c").value == 8000
+
+
+def test_histogram_buckets_and_percentiles():
+    h = Histogram("lat", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.count == 5
+    assert abs(h.sum - 5.56) < 1e-9
+    d = h.to_dict()
+    assert d["buckets"] == {"0.01": 2, "0.1": 1, "1.0": 1, "+inf": 1}
+    # p50 falls in the (0.01, 0.1] bucket; interpolation stays inside it
+    p50 = h.percentile(50)
+    assert 0.01 <= p50 <= 0.1
+    assert h.percentile(100) >= 1.0
+
+
+def test_histogram_empty_percentile_is_none():
+    h = Histogram("empty")
+    assert h.percentile(50) is None
+    assert h.mean() is None
+
+
+def test_registry_get_or_create_and_labels():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    a = reg.gauge("forwarder.endpoint_outstanding", {"endpoint": "a"})
+    b = reg.gauge("forwarder.endpoint_outstanding", {"endpoint": "b"})
+    assert a is not b
+    a.set(1)
+    b.set(2)
+    fam = reg.family("forwarder.endpoint_outstanding")
+    assert sorted(fam.values()) == [1.0, 2.0]
+
+
+def test_export_text_prometheus_shape():
+    reg = MetricsRegistry()
+    reg.counter("service.tasks_submitted").inc(3)
+    reg.gauge("endpoint.queue_depth", {"endpoint": "ep0"}).set(7)
+    reg.histogram("service.e2e_latency_s").observe(0.02)
+    reg.counter("forwarder.routing_decisions", {"policy": "random"}).inc(2)
+    text = reg.export_text()
+    assert "service_tasks_submitted_total 3" in text
+    assert 'endpoint_queue_depth{endpoint="ep0"} 7.0' in text
+    assert "service_e2e_latency_s_count 1" in text
+    # suffix precedes the labels, or Prometheus rejects the line
+    assert 'forwarder_routing_decisions_total{policy="random"} 2' in text
+
+
+def test_merged_snapshot_unions_registries():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("x").inc()
+    b.counter("y").inc(2)
+    merged = merged_snapshot([a, b])
+    assert merged["counters"] == {"x": 1, "y": 2}
+
+
+# ---------------------------------------------------------------- integration
+def _noop(doc):
+    return doc
+
+
+def test_snapshot_from_map_run_reports_fabric_telemetry():
+    """Acceptance: non-zero submit/complete counters and latency histograms
+    from a FunctionService.map() run, in one shared registry."""
+    svc = FunctionService()
+    svc.make_endpoint("m0", n_executors=2, workers_per_executor=2, prefetch=2)
+    fid = svc.register_function(_noop, name="noop")
+    outs = svc.map(fid, [{"i": i} for i in range(16)], timeout=60)
+    assert len(outs) == 16
+    snap = svc.metrics.snapshot()
+    c = snap["counters"]
+    assert c["service.tasks_submitted"] >= 16
+    assert c["service.tasks_completed"] >= 16
+    assert c["forwarder.tasks_routed"] >= 16
+    assert c["forwarder.batches_delivered"] >= 1
+    assert c["endpoint.tasks_completed"] >= 16
+    assert c["executor.tasks_executed"] >= 16
+    assert c["warming.cold_starts"] >= 1
+    h = snap["histograms"]
+    assert h["service.e2e_latency_s"]["count"] >= 16
+    assert h["service.e2e_latency_s"]["p95"] is not None
+    assert h["executor.service_time_s"]["count"] >= 16
+    assert h["endpoint.dispatch_latency_s"]["count"] >= 16
+    assert h["forwarder.batch_size"]["count"] >= 1
+    svc.shutdown()
+
+
+def test_memo_hits_counted():
+    svc = FunctionService()
+    svc.make_endpoint("memo", n_executors=1, workers_per_executor=1)
+    fid = svc.register_function(_noop, name="noop")
+    svc.run(fid, {"k": 1}, memoize=True, sync=True, timeout=30)
+    svc.run(fid, {"k": 1}, memoize=True, sync=True, timeout=30)
+    snap = svc.metrics.snapshot()
+    assert snap["counters"].get("service.memo_hits", 0) >= 1
+    svc.shutdown()
+
+
+def test_failed_tasks_counted():
+    svc = FunctionService()
+    svc.make_endpoint("fail", n_executors=1, workers_per_executor=1)
+
+    def boom(doc):
+        raise RuntimeError("boom")
+
+    fid = svc.register_function(boom)
+    fut = svc.run(fid, {}, max_retries=0)
+    try:
+        fut.result(30)
+    except RuntimeError:
+        pass
+    snap = svc.metrics.snapshot()
+    assert snap["counters"].get("service.tasks_failed", 0) >= 1
+    svc.shutdown()
+
+
+def test_warm_hits_counted_across_repeat_invocations():
+    svc = FunctionService()
+    svc.make_endpoint("warm", n_executors=1, workers_per_executor=1)
+    fid = svc.register_function(_noop, name="noop")
+    for i in range(4):
+        svc.run(fid, {"i": i}, sync=True, timeout=30)
+    snap = svc.metrics.snapshot()
+    assert snap["counters"].get("warming.warm_hits", 0) >= 1
+    svc.shutdown()
+
+
+class _FakeEndpoint:
+    def __init__(self, eid):
+        self.endpoint_id = eid
+
+    def is_alive(self, max_heartbeat_age_s=None):
+        return True
+
+    def capacity(self):
+        return 4
+
+    def submit(self, env, future):
+        pass
+
+    def shutdown(self):
+        pass
+
+
+def test_reregistered_endpoint_is_unmeasured_again():
+    """A deregistered endpoint that rejoins must be explored afresh by
+    latency_aware routing, not shunned on a stale EWMA gauge."""
+    from repro.core import Forwarder
+
+    fwd = Forwarder()
+    ep = _FakeEndpoint("ep-rejoin")
+    fwd.register(ep)
+    fwd._records["ep-rejoin"].latency_ewma = 0.7
+    fwd.deregister("ep-rejoin")
+    fwd.register(ep)
+    assert fwd._records["ep-rejoin"].latency_ewma is None
+    fwd.shutdown()
+
+
+def test_service_rebinds_prebuilt_forwarder_onto_explicit_registry():
+    """Adopting a pre-built forwarder under an explicit registry must move
+    already-registered records over — one fabric, one registry."""
+    from repro.core import Forwarder
+
+    fwd = Forwarder()
+    fwd.register(_FakeEndpoint("ep-early"))
+    mine = MetricsRegistry()
+    svc = FunctionService(forwarder=fwd, metrics=mine)
+    assert svc.metrics is mine and fwd.metrics is mine
+    fwd._records["ep-early"].latency_ewma = 0.2
+    assert mine.family("forwarder.endpoint_latency_ewma_s") == {
+        "forwarder.endpoint_latency_ewma_s{endpoint=ep-early}": 0.2
+    }
+    svc.shutdown()
+
+
+def test_forwarder_batch_size_uses_size_buckets():
+    svc = FunctionService()
+    svc.make_endpoint("bb", n_executors=1, workers_per_executor=2, prefetch=2)
+    fid = svc.register_function(_noop, name="noop")
+    futs = svc.batch_run(fid, [{"i": i} for i in range(10)])
+    [f.result(30) for f in futs]
+    h = svc.metrics.histogram("forwarder.batch_size", buckets=SIZE_BUCKETS)
+    assert h.count >= 1
+    # a 10-task batch lands in the (8, 16] bucket
+    assert any(float(k) >= 10 for k in h.to_dict()["buckets"] if k != "+inf")
+    svc.shutdown()
