@@ -1,0 +1,165 @@
+"""DAG workflow engine vs. the linear Flow on the same graph (paper §7).
+
+The §7 science scenarios are multi-step pipelines; the DAG engine runs
+independent branches concurrently (and ships each ready set as ONE TaskBatch
+frame), so a diamond graph — source → two parallel branches → join — has a
+critical path of 3 task-times where the linear Flow pays all 4 sequentially.
+
+Rows:
+    workflow/diamond_dag       per-graph latency + graphs/s via Workflow
+    workflow/sequential_flow   the same 4 steps as a linear Flow
+    workflow/speedup           DAG vs. Flow throughput ratio (must be >= 1)
+    workflow/sibling_batching  TaskBatch frames per graph (3, not 4: the two
+                               branch nodes ride one frame)
+
+Also writes ``benchmarks/results/workflow.json`` (params + throughputs +
+frame accounting), uploaded by CI's bench-smoke job.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_workflow --smoke
+(or directly:    python benchmarks/bench_workflow.py --smoke)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+if __package__ in (None, ""):  # direct-file run: python benchmarks/bench_workflow.py
+    import sys
+
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(os.path.dirname(_here), "src"))
+    from common import emit, scaled, sleeper
+else:
+    from .common import emit, scaled, sleeper
+
+from repro.core import ActionStep, Flow, FunctionService, Workflow, WorkflowNode
+
+N_GRAPHS = scaled(30, 8)
+TASK_S = 0.03
+WORKERS = 4
+
+
+def _service():
+    svc = FunctionService()
+    svc.make_endpoint("bench-wf", n_executors=1, workers_per_executor=WORKERS)
+    fid = svc.register_function(sleeper, name="sleeper")
+    return svc, fid
+
+
+def _bench_dag():
+    svc, fid = _service()
+    wf = Workflow([
+        WorkflowNode("src", fid),
+        WorkflowNode("a", fid, deps=["src"],
+                     prepare=lambda doc, up: {"i": 1, "t": TASK_S}),
+        WorkflowNode("b", fid, deps=["src"],
+                     prepare=lambda doc, up: {"i": 2, "t": TASK_S}),
+        WorkflowNode("join", fid, deps=["a", "b"],
+                     prepare=lambda doc, up: {"i": 3, "t": TASK_S}),
+    ], name="diamond")
+    t0 = time.monotonic()
+    for i in range(N_GRAPHS):
+        run = wf.start(svc, {"i": i, "t": TASK_S})
+        out = run.wait(60)
+        assert out == {"i": 3}, out
+    dt = time.monotonic() - t0
+    fstats = svc.forwarder.stats()
+    snap = svc.metrics.snapshot()
+    svc.shutdown()
+    return dt, fstats, snap
+
+
+def _bench_flow():
+    svc, fid = _service()
+    flow = Flow([
+        ActionStep(fid, name=f"s{i}", prepare=lambda doc: {"i": doc["i"], "t": TASK_S})
+        for i in range(4)
+    ])
+    t0 = time.monotonic()
+    for i in range(N_GRAPHS):
+        run = flow.start(svc, {"i": i, "t": TASK_S})
+        Flow.wait(run, timeout=60)
+    dt = time.monotonic() - t0
+    svc.shutdown()
+    return dt
+
+
+def run():
+    rows = []
+    dag_dt, fstats, snap = _bench_dag()
+    counters = snap["counters"]
+    flow_dt = _bench_flow()
+
+    dag_tput = N_GRAPHS / dag_dt
+    flow_tput = N_GRAPHS / flow_dt
+    speedup = dag_tput / flow_tput
+    frames_per_graph = fstats["batches_delivered"] / N_GRAPHS
+    tasks_per_graph = fstats["tasks_delivered"] / N_GRAPHS
+
+    # the point of the diamond: parallel branches beat the sequential chain
+    assert speedup >= 1.0, (
+        f"DAG throughput below sequential Flow: {dag_tput:.2f} vs {flow_tput:.2f} graphs/s"
+    )
+    # sibling branches ride one frame: 3 deliveries per 4-node graph
+    assert frames_per_graph == 3.0 and tasks_per_graph == 4.0, (
+        f"expected 3 frames / 4 tasks per graph, got {frames_per_graph}/{tasks_per_graph}"
+    )
+    assert counters.get("workflow.runs{state=succeeded}", 0) == N_GRAPHS
+
+    rows.append(emit(
+        "workflow/diamond_dag",
+        dag_dt / N_GRAPHS * 1e6,
+        f"{dag_tput:.1f} graphs/s ({N_GRAPHS} diamond graphs, task={TASK_S*1e3:.0f}ms)",
+    ))
+    rows.append(emit(
+        "workflow/sequential_flow",
+        flow_dt / N_GRAPHS * 1e6,
+        f"{flow_tput:.1f} graphs/s (same 4 steps, linear)",
+    ))
+    rows.append(emit(
+        "workflow/speedup",
+        0.0,
+        f"{speedup:.2f}x DAG over linear (critical path 3 vs 4 task-times)",
+    ))
+    rows.append(emit(
+        "workflow/sibling_batching",
+        0.0,
+        f"{frames_per_graph:.0f} TaskBatch frames per graph for "
+        f"{tasks_per_graph:.0f} nodes (siblings share one frame)",
+    ))
+
+    out = os.path.join(os.path.dirname(__file__), "results", "workflow.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "graphs": N_GRAPHS,
+                "task_s": TASK_S,
+                "workers": WORKERS,
+                "dag_graphs_per_s": round(dag_tput, 2),
+                "flow_graphs_per_s": round(flow_tput, 2),
+                "speedup": round(speedup, 3),
+                "frames_per_graph": frames_per_graph,
+                "tasks_per_graph": tasks_per_graph,
+                "node_latency_s": snap["histograms"].get("workflow.node_latency_s"),
+            },
+            f,
+            indent=1,
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI smoke runs")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        N_GRAPHS = scaled(30, 8)
+    print("name,us_per_call,derived")
+    run()

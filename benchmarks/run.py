@@ -18,6 +18,7 @@ SUITES = (
     "throughput",     # §6.2.3
     "federation",     # multi-endpoint fabric: policies x endpoint counts
     "elasticity",     # §5.4 managed elasticity: blocks-over-time under burst
+    "workflow",       # §7 pipelines: diamond DAG vs. linear Flow
     "fault",          # Fig. 7
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)

@@ -1,0 +1,114 @@
+"""Event-driven science pipeline: data arrival triggers a DAG workflow.
+
+    PYTHONPATH=src python examples/event_pipeline.py
+
+The paper's core promise is computation that "can occur near data, be
+triggered by events (e.g., arrival of new data)" (§1), and its §7 case
+studies are all multi-step pipelines. Here a detector "writes" frames; each
+:class:`DataArrivalEvent` on the :class:`EventBus` fires a :class:`Trigger`
+that starts one run of a detect → (extract metadata ∥ extract spectrum) →
+aggregate diamond workflow — the Skluma/DLHub pattern, but event-driven and
+branching instead of a hand-rolled linear flow. Sibling branches are
+submitted as ONE TaskBatch frame, and children follow their parent's warm
+endpoint via affinity hints.
+
+Expected output: one narrated line per arriving frame (hot-pixel count +
+spectral peak), then a fabric summary showing `trigger.fired` == frames,
+`workflow.runs{state=succeeded}` == frames, and 3 TaskBatch frames per
+4-node graph (the two extract branches share a frame).
+"""
+import time
+
+import numpy as np
+
+from repro.core import (
+    DataArrivalEvent,
+    EventBus,
+    FunctionService,
+    Trigger,
+    Workflow,
+    WorkflowNode,
+)
+
+N_FRAMES = 6
+
+
+def detect(doc):
+    """Threshold the raw frame: which pixels fired?"""
+    frame = np.asarray(doc["item"]["pixels"])
+    return {"frame_id": doc["item"]["frame_id"],
+            "pixels": frame,
+            "hot": (frame > doc["item"]["threshold"])}
+
+
+def extract_metadata(det):
+    return {"frame_id": det["frame_id"], "n_hot": int(det["hot"].sum())}
+
+
+def extract_spectrum(det):
+    spectrum = np.abs(np.fft.rfft(det["pixels"].mean(axis=0)))
+    return {"peak_bin": int(spectrum[1:].argmax()) + 1,
+            "peak_power": float(spectrum[1:].max())}
+
+
+def aggregate(upstream):
+    meta, spec = upstream["metadata"], upstream["spectrum"]
+    return {"frame_id": meta["frame_id"], "n_hot": meta["n_hot"],
+            "peak_bin": spec["peak_bin"], "peak_power": spec["peak_power"]}
+
+
+def main() -> None:
+    service = FunctionService()
+    service.make_endpoint("beamline", n_executors=2, workers_per_executor=4)
+
+    wf = Workflow([
+        WorkflowNode("detect", service.register_function(detect, name="detect")),
+        WorkflowNode("metadata", service.register_function(extract_metadata),
+                     deps=["detect"]),
+        WorkflowNode("spectrum", service.register_function(extract_spectrum),
+                     deps=["detect"]),
+        WorkflowNode("aggregate", service.register_function(aggregate),
+                     deps=["metadata", "spectrum"],
+                     prepare=lambda doc, up: {"metadata": up["metadata"],
+                                              "spectrum": up["spectrum"]}),
+    ], name="frame-pipeline")
+
+    bus = EventBus()
+    trigger = bus.attach(Trigger(
+        wf, service, name="frame-arrival",
+        predicate=lambda e: e.source == "detector",
+    ))
+
+    rng = np.random.default_rng(7)
+    print(f"detector streaming {N_FRAMES} frames onto the event bus...")
+    for i in range(N_FRAMES):
+        frame = rng.random((32, 64)) + np.sin(np.arange(64) * (i + 1) * 0.4)
+        bus.publish(DataArrivalEvent(
+            "detector",
+            item={"frame_id": i, "pixels": frame, "threshold": 1.6},
+        ))
+        time.sleep(0.01)  # detector readout cadence
+
+    for run in trigger.runs:
+        out = run.wait(60)
+        print(f"  frame {out['frame_id']}: {out['n_hot']:4d} hot pixels, "
+              f"spectral peak @ bin {out['peak_bin']} "
+              f"(power {out['peak_power']:.1f})")
+
+    snap = service.metrics.snapshot()
+    counters = snap["counters"]
+    fwd = service.forwarder.stats()
+    assert counters["trigger.fired{trigger=frame-arrival}"] == N_FRAMES
+    assert counters["workflow.runs{state=succeeded}"] == N_FRAMES
+    print(f"\nfabric: trigger.fired={counters['trigger.fired{trigger=frame-arrival}']} "
+          f"workflow.runs(succeeded)={counters['workflow.runs{state=succeeded}']} "
+          f"nodes={counters['workflow.nodes_completed']}")
+    print(f"frames/graph: {fwd['batches_delivered'] / N_FRAMES:.1f} "
+          f"(4 nodes in 3 TaskBatch frames — branches share one), "
+          f"affinity_hits={counters.get('forwarder.affinity_hits', 0)}")
+    print("done — every arrival event drove one DAG run end-to-end.")
+    service.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,20 @@ from .auth import (  # noqa: F401
     Token,
     TokenAuthority,
 )
-from .automation import ActionStep, Flow, FlowRun  # noqa: F401
+from .automation import (  # noqa: F401
+    ActionStep,
+    DataArrivalEvent,
+    Event,
+    EventBus,
+    Flow,
+    FlowRun,
+    TimerEvent,
+    TimerSource,
+    Trigger,
+    Workflow,
+    WorkflowNode,
+    WorkflowRun,
+)
 from .autoscaler import (  # noqa: F401
     Autoscaler,
     LatencySLOPolicy,
@@ -56,6 +69,6 @@ from .provider import (  # noqa: F401
 from .registry import FunctionRegistry, RegisteredFunction, hash_function  # noqa: F401
 from .scheduler import Scheduler  # noqa: F401
 from .serializer import packb, payload_hash, unpackb  # noqa: F401
-from .service import FunctionService  # noqa: F401
+from .service import FunctionService, Invocation  # noqa: F401
 from .warming import WarmPool  # noqa: F401
 from .worker import Worker  # noqa: F401

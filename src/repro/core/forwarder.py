@@ -219,6 +219,17 @@ class Forwarder:
         """Policy selection over a pre-computed live list (callers batching
         many tasks pay the liveness scan once, not once per task). Must be
         called with the lock held."""
+        if env.affinity_hint is not None:
+            # Soft warm-affinity (workflow parent→child): prefer the hinted
+            # endpoint while it is live with spare capacity; saturation or
+            # death falls through to the configured policy.
+            for r in live:
+                if (
+                    r.endpoint.endpoint_id == env.affinity_hint
+                    and len(r.outstanding) < max(1, r.endpoint.capacity())
+                ):
+                    self.metrics.counter("forwarder.affinity_hits").inc()
+                    return r
         if self.policy == "random":
             return self._rng.choice(live)
         if self.policy == "least_outstanding":
@@ -301,6 +312,7 @@ class Forwarder:
                 rec.routed += 1
                 self._futures[env.task_id] = future
                 self._task_endpoint[env.task_id] = eid
+                future.endpoint_id = eid
                 chosen.append(eid)
                 deliveries.setdefault(eid, (rec, []))[1].append((env, future))
             self.metrics.counter("forwarder.tasks_routed").inc(len(pairs))
@@ -492,6 +504,7 @@ class Forwarder:
                     rec.routed += 1
                     rec.sync_outstanding()
                     self._task_endpoint[env.task_id] = ep.endpoint_id
+                    future.endpoint_id = ep.endpoint_id
                 self.failovers += 1
                 self.metrics.counter("forwarder.failovers").inc()
                 deliveries.setdefault(ep.endpoint_id, []).append((env, future))

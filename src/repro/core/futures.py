@@ -80,6 +80,10 @@ class TaskEnvelope:
     # Frame identity: set when this task travels inside a TaskBatch. A retry
     # is a fresh single-task attempt, so clone_for_retry() drops it.
     batch_id: Optional[str] = None
+    # Soft routing preference (workflow warm-affinity: a node's children
+    # prefer the endpoint holding the parent's warm function). The Forwarder
+    # honors it only while the hinted endpoint is live and has spare capacity.
+    affinity_hint: Optional[str] = None
 
     def clone_for_retry(self) -> "TaskEnvelope":
         env = TaskEnvelope(
@@ -91,6 +95,7 @@ class TaskEnvelope:
             max_retries=self.max_retries,
             retries=self.retries + 1,
             timestamps=self.timestamps,
+            affinity_hint=self.affinity_hint,
         )
         return env
 
@@ -107,6 +112,10 @@ class TaskFuture:
         self._exception: Optional[BaseException] = None
         self.timestamps = Timestamps()
         self._callbacks: list[Callable[["TaskFuture"], None]] = []
+        # Stamped by the Forwarder at routing time (and re-stamped on
+        # failover): where this task currently lives. Consumers (the workflow
+        # engine's warm-affinity hints) treat it as best-effort.
+        self.endpoint_id: Optional[str] = None
 
     # -- producer side -------------------------------------------------
     def set_state(self, state: TaskState) -> None:
@@ -172,6 +181,17 @@ class TaskFuture:
                 self._callbacks.append(cb)
         if run_now:
             cb(self)
+
+    def remove_done_callback(self, cb: Callable[["TaskFuture"], None]) -> bool:
+        """Detach a pending done-callback (workflow cancel: the in-flight task
+        keeps running but its completion no longer drives the run). Returns
+        True if the callback was found and removed."""
+        with self._lock:
+            try:
+                self._callbacks.remove(cb)
+                return True
+            except ValueError:
+                return False
 
     def latency_breakdown(self) -> dict:
         return self.timestamps.breakdown()

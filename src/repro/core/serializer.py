@@ -49,8 +49,11 @@ def _ext_hook(code: int, data: bytes):
         unpacker.feed(data)
         dtype_str, shape = unpacker.unpack()
         offset = unpacker.tell()
-        arr = np.frombuffer(data[offset:], dtype=np.dtype(dtype_str))
-        return arr.reshape(shape)
+        # copy out of the wire bytes: a frombuffer view would be read-only,
+        # and functions mutate their inputs freely (one copy, not a
+        # slice-then-bytearray double copy)
+        arr = np.frombuffer(data, dtype=np.dtype(dtype_str), offset=offset)
+        return arr.reshape(shape).copy()
     if code == _EXT_TUPLE:
         return tuple(unpackb(data))
     if code == _EXT_SET:

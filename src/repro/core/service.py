@@ -19,8 +19,10 @@ endpoint.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import auth as auth_mod
 from . import serializer
@@ -33,6 +35,52 @@ from .memoization import MemoCache
 from .metrics import MetricsRegistry
 from .registry import FunctionRegistry
 from .worker import TaskResult
+
+
+@dataclass
+class Invocation:
+    """One invocation spec for :meth:`FunctionService.run_many`.
+
+    Unlike ``batch_run`` (one function, many payloads), a sequence of
+    Invocations may name different functions and still travel the fabric as
+    one batch — the submission shape of a workflow's ready set, where sibling
+    DAG nodes run different functions but should ride one TaskBatch frame.
+    """
+
+    function_id: str
+    payload: Any
+    endpoint_id: Optional[str] = None
+    container: str = "default"
+    memoize: bool = False
+    max_retries: int = 2
+    affinity_hint: Optional[str] = None
+
+
+def _scan_futures(payload: Any, found: Optional[List[TaskFuture]] = None) -> List[TaskFuture]:
+    """Collect TaskFuture leaves nested anywhere in a payload pytree."""
+    if found is None:
+        found = []
+    if isinstance(payload, TaskFuture):
+        found.append(payload)
+    elif isinstance(payload, dict):
+        for v in payload.values():
+            _scan_futures(v, found)
+    elif isinstance(payload, (list, tuple)):
+        for v in payload:
+            _scan_futures(v, found)
+    return found
+
+
+def _resolve_futures(payload: Any) -> Any:
+    """Substitute each (completed) TaskFuture leaf with its result."""
+    if isinstance(payload, TaskFuture):
+        return payload.result(0)
+    if isinstance(payload, dict):
+        return {k: _resolve_futures(v) for k, v in payload.items()}
+    if isinstance(payload, (list, tuple)):
+        out = [_resolve_futures(v) for v in payload]
+        return tuple(out) if isinstance(payload, tuple) else out
+    return payload
 
 
 class FunctionService:
@@ -109,6 +157,126 @@ class FunctionService:
         return ep
 
     # -- invocation ---------------------------------------------------------
+    def run_many(
+        self,
+        invocations: Sequence[Invocation],
+        token: Optional[Token] = None,
+    ) -> List[TaskFuture]:
+        """Submit a heterogeneous batch: each :class:`Invocation` may name a
+        different function, yet everything routable now travels the Forwarder
+        as ONE batch per endpoint pin. Auth and registry lookups are paid once
+        per distinct function, not once per task.
+
+        Dependency-aware submission ("futures as inputs"): a payload may embed
+        :class:`TaskFuture` leaves anywhere in its pytree. Such tasks are held
+        back until every input future resolves, then submitted with the input
+        results substituted in place — an upstream failure fails the dependent
+        task without it ever reaching an endpoint.
+        """
+        t_submit = time.monotonic()
+        identity = self._identity(token, auth_mod.SCOPE_INVOKE)
+        fns = {}
+        for inv in invocations:  # auth/registry paid once per distinct function
+            if inv.function_id not in fns:
+                rf = self.registry.get(inv.function_id)
+                if not self.registry.authorized(inv.function_id, identity):
+                    raise auth_mod.AuthError(f"{identity} may not invoke {rf.name}")
+                fns[inv.function_id] = rf
+        t_service_in = time.monotonic()
+        self.metrics.counter("service.tasks_submitted").inc(len(invocations))
+
+        futures: List[TaskFuture] = []
+        groups: Dict[Optional[str], List[Tuple[TaskEnvelope, TaskFuture]]] = {}
+        for inv in invocations:
+            rf = fns[inv.function_id]
+            wire = rf.metadata.get("pass_through", False)
+            memoizable = inv.memoize and rf.deterministic and not wire
+            future = TaskFuture(new_task_id())
+            future.timestamps.client_submit = t_submit
+            future.timestamps.service_in = t_service_in
+            future.add_done_callback(self._observe_completion)
+            futures.append(future)
+
+            inputs = [] if wire else _scan_futures(inv.payload)
+            if inputs:
+                self._submit_deferred(inv, future, inputs, memoizable, wire)
+                continue
+            env = self._build_envelope(inv, future, inv.payload, memoizable, wire)
+            if env is not None:  # None = served from the memo cache
+                groups.setdefault(inv.endpoint_id, []).append((env, future))
+        for endpoint_id, pairs in groups.items():
+            self.forwarder.submit_many(pairs, endpoint_id=endpoint_id)
+        return futures
+
+    def _build_envelope(
+        self,
+        inv: Invocation,
+        future: TaskFuture,
+        payload: Any,
+        memoizable: bool,
+        wire: bool,
+    ) -> Optional[TaskEnvelope]:
+        """Memo-check `payload` and wrap it for the wire. Returns None when the
+        memo cache completed the future without needing an endpoint."""
+        digest = None
+        if memoizable:
+            digest = serializer.payload_hash(payload)
+            hit, value = self.memo.get(inv.function_id, digest)
+            if hit:
+                self.metrics.counter("service.memo_hits").inc()
+                future.set_result(value, state=TaskState.MEMOIZED)
+                return None
+        env = TaskEnvelope(
+            task_id=future.task_id,
+            function_id=inv.function_id,
+            payload=payload if wire else serializer.packb(payload),
+            container=inv.container,
+            memoize=digest is not None,
+            max_retries=inv.max_retries,
+            affinity_hint=inv.affinity_hint,
+        )
+        env.timestamps.client_submit = future.timestamps.client_submit
+        env.timestamps.service_in = future.timestamps.service_in
+        if digest is not None:
+            env.__dict__["_memo_digest"] = digest
+        return env
+
+    def _submit_deferred(
+        self,
+        inv: Invocation,
+        future: TaskFuture,
+        inputs: List[TaskFuture],
+        memoizable: bool,
+        wire: bool,
+    ) -> None:
+        """Hold `inv` until every input future resolves, then substitute the
+        results into the payload and submit. First input failure wins and
+        fails the dependent future immediately."""
+        state = {"remaining": len(inputs)}
+        lock = threading.Lock()
+
+        def _on_input(done: TaskFuture) -> None:
+            exc = done.exception(0)
+            if exc is not None:
+                future.set_exception(exc)
+                return
+            with lock:
+                state["remaining"] -= 1
+                if state["remaining"]:
+                    return
+            if future.done():  # a sibling input already failed us
+                return
+            try:
+                payload = _resolve_futures(inv.payload)
+                env = self._build_envelope(inv, future, payload, memoizable, wire)
+                if env is not None:
+                    self.forwarder.submit(env, future, endpoint_id=inv.endpoint_id)
+            except BaseException as exc:  # noqa: BLE001 - must reach the future
+                future.set_exception(exc)
+
+        for f in inputs:
+            f.add_done_callback(_on_input)
+
     def _submit_tasks(
         self,
         function_id: str,
@@ -119,54 +287,22 @@ class FunctionService:
         max_retries: int = 2,
         token: Optional[Token] = None,
     ) -> List[TaskFuture]:
-        """Build one future per payload and submit the non-memoized remainder
-        to the Forwarder as ONE batch. Auth, registry lookup, and routing
-        locks are paid once per batch instead of once per task; a single
-        ``run()`` is simply a batch of one."""
-        t_submit = time.monotonic()
-        identity = self._identity(token, auth_mod.SCOPE_INVOKE)
-        rf = self.registry.get(function_id)
-        if not self.registry.authorized(function_id, identity):
-            raise auth_mod.AuthError(f"{identity} may not invoke {rf.name}")
-
-        wire = rf.metadata.get("pass_through", False)
-        memoizable = memoize and rf.deterministic and not wire
-        t_service_in = time.monotonic()
-        self.metrics.counter("service.tasks_submitted").inc(len(payloads))
-        futures: List[TaskFuture] = []
-        pairs = []
-        for payload in payloads:
-            future = TaskFuture(new_task_id())
-            future.timestamps.client_submit = t_submit
-            future.timestamps.service_in = t_service_in
-            future.add_done_callback(self._observe_completion)
-            futures.append(future)
-
-            digest = None
-            if memoizable:
-                digest = serializer.payload_hash(payload)
-                hit, value = self.memo.get(function_id, digest)
-                if hit:
-                    self.metrics.counter("service.memo_hits").inc()
-                    future.set_result(value, state=TaskState.MEMOIZED)
-                    continue
-
-            env = TaskEnvelope(
-                task_id=future.task_id,
-                function_id=function_id,
-                payload=payload if wire else serializer.packb(payload),
-                container=container,
-                memoize=digest is not None,
-                max_retries=max_retries,
-            )
-            env.timestamps.client_submit = future.timestamps.client_submit
-            env.timestamps.service_in = future.timestamps.service_in
-            if digest is not None:
-                env.__dict__["_memo_digest"] = digest
-            pairs.append((env, future))
-        if pairs:
-            self.forwarder.submit_many(pairs, endpoint_id=endpoint_id)
-        return futures
+        """Homogeneous batch: one function, many payloads, submitted to the
+        Forwarder as ONE batch (a single ``run()`` is simply a batch of one)."""
+        return self.run_many(
+            [
+                Invocation(
+                    function_id=function_id,
+                    payload=payload,
+                    endpoint_id=endpoint_id,
+                    container=container,
+                    memoize=memoize,
+                    max_retries=max_retries,
+                )
+                for payload in payloads
+            ],
+            token=token,
+        )
 
     def run(
         self,

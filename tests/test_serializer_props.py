@@ -1,0 +1,148 @@
+"""Serializer hardening: writable arrays out of unpackb, plus hypothesis
+round-trip properties over 0-d, Fortran-order, and nested-pytree payloads."""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on clean environments
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.serializer import packb, payload_hash, unpackb
+
+
+def roundtrip(obj):
+    return unpackb(packb(obj))
+
+
+# ------------------------------------------------------------ writability
+def test_unpacked_array_is_writable():
+    """Seed regression: unpackb built arrays as np.frombuffer views over the
+    immutable wire bytes, so functions mutating their inputs crashed with
+    'assignment destination is read-only'."""
+    arr = roundtrip(np.arange(6, dtype=np.float32).reshape(2, 3))
+    assert arr.flags.writeable
+    arr[0, 0] = 99.0                      # must not raise
+    assert arr[0, 0] == 99.0
+
+
+def test_unpacked_nested_arrays_are_writable():
+    doc = {"frames": [np.zeros(3), np.ones((2, 2), dtype=np.int64)],
+           "meta": (np.array(5),)}
+    out = roundtrip(doc)
+    for leaf in (out["frames"][0], out["frames"][1], out["meta"][0]):
+        assert leaf.flags.writeable
+        leaf[...] = 1
+
+
+def test_zero_d_array_roundtrip():
+    arr = np.array(3.5)
+    out = roundtrip(arr)
+    assert out.shape == ()
+    assert out.dtype == arr.dtype
+    assert out == 3.5
+    assert out.flags.writeable
+
+
+def test_fortran_order_array_roundtrip():
+    arr = np.asfortranarray(np.arange(12, dtype=np.float64).reshape(3, 4))
+    assert arr.flags.f_contiguous and not arr.flags.c_contiguous
+    out = roundtrip(arr)
+    np.testing.assert_array_equal(out, arr)   # values survive the C-order wire
+    assert out.flags.writeable
+
+
+def test_nested_pytree_roundtrip():
+    doc = {
+        "a": [1, 2.5, "x", None, True],
+        "b": (np.arange(4, dtype=np.int32), {"c": complex(1, -2)}),
+        "s": {3, 1, 2},
+    }
+    out = roundtrip(doc)
+    assert out["a"] == [1, 2.5, "x", None, True]
+    np.testing.assert_array_equal(out["b"][0], np.arange(4, dtype=np.int32))
+    # tuples ride the wire as msgpack arrays and come back as lists
+    assert isinstance(out["b"], list)
+    assert out["b"][1]["c"] == complex(1, -2)
+    assert out["s"] == {3, 1, 2}
+
+
+# ------------------------------------------------------------ hypothesis props
+_DTYPES = (np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_)
+
+array_specs = st.tuples(
+    st.sampled_from(range(len(_DTYPES))),
+    st.lists(st.integers(min_value=0, max_value=4), min_size=0, max_size=3),
+    st.booleans(),  # Fortran order
+)
+
+
+def build_array(spec):
+    dtype_idx, shape, fortran = spec
+    dtype = _DTYPES[dtype_idx]
+    size = int(np.prod(shape)) if shape else 1
+    arr = (np.arange(size) % 127).reshape(shape).astype(dtype)
+    return np.asfortranarray(arr) if fortran and arr.ndim > 1 else arr
+
+
+scalars = st.one_of(
+    st.none(),
+    st.booleans(),
+    st.integers(min_value=-(2**53), max_value=2**53),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    st.text(max_size=20),
+)
+
+payloads = st.recursive(
+    st.one_of(scalars, array_specs.map(build_array)),
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.tuples(children, children),
+        st.dictionaries(st.text(max_size=8), children, max_size=4),
+    ),
+    max_leaves=12,
+)
+
+
+def assert_payload_equal(a, b):
+    if isinstance(a, np.ndarray):
+        assert isinstance(b, np.ndarray)
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(b, a)
+        assert b.flags.writeable
+    elif isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            assert_payload_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        # tuples come back as lists (msgpack array on the wire)
+        assert isinstance(b, (list, tuple)) and len(a) == len(b)
+        for x, y in zip(a, b):
+            assert_payload_equal(x, y)
+    else:
+        assert a == b
+
+
+@settings(max_examples=60, deadline=None)
+@given(payloads)
+def test_roundtrip_property(payload):
+    assert_payload_equal(payload, roundtrip(payload))
+
+
+@settings(max_examples=60, deadline=None)
+@given(payloads)
+def test_payload_hash_is_stable_and_roundtrip_invariant(payload):
+    # packing is canonical: hashing the payload twice, or hashing its
+    # round-tripped self, must agree (memo keys survive the wire)
+    h = payload_hash(payload)
+    assert payload_hash(payload) == h
+    assert payload_hash(roundtrip(payload)) == h
+
+
+@settings(max_examples=40, deadline=None)
+@given(array_specs)
+def test_every_unpacked_array_is_writable(spec):
+    arr = build_array(spec)
+    out = roundtrip(arr)
+    assert out.flags.writeable
+    if out.size:
+        out.flat[0] = 0                   # must not raise

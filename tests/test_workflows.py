@@ -1,0 +1,531 @@
+"""Automation tier: DAG Workflow engine, EventBus triggers, and the linear
+Flow shim (plus the two seed-flow regressions: cancel detaching the in-flight
+future, and iterative — non-recursive — chain advancement)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ActionStep,
+    DataArrivalEvent,
+    EventBus,
+    Flow,
+    FunctionService,
+    TimerSource,
+    Trigger,
+    Workflow,
+    WorkflowNode,
+    serializer,
+)
+
+
+@pytest.fixture()
+def svc():
+    service = FunctionService()
+    service.make_endpoint("wf-ep", n_executors=1, workers_per_executor=4)
+    yield service
+    service.shutdown()
+
+
+# ------------------------------------------------------------ graph validation
+def test_workflow_validates_graph():
+    with pytest.raises(ValueError, match="duplicate"):
+        Workflow([WorkflowNode("a", "f"), WorkflowNode("a", "f")])
+    with pytest.raises(ValueError, match="unknown"):
+        Workflow([WorkflowNode("a", "f", deps=["ghost"])])
+    with pytest.raises(ValueError, match="cycle"):
+        Workflow([
+            WorkflowNode("a", "f", deps=["b"]),
+            WorkflowNode("b", "f", deps=["a"]),
+        ])
+    with pytest.raises(ValueError, match="on_error"):
+        WorkflowNode("a", "f", on_error="explode")
+
+
+def test_topological_order_respects_deps():
+    wf = Workflow([
+        WorkflowNode("join", "f", deps=["a", "b"]),
+        WorkflowNode("b", "f", deps=["src"]),
+        WorkflowNode("a", "f", deps=["src"]),
+        WorkflowNode("src", "f"),
+    ])
+    order = wf.topological_order()
+    assert order.index("src") < order.index("a") < order.index("join")
+    assert order.index("src") < order.index("b") < order.index("join")
+    assert wf.sinks == ["join"]
+
+
+# ------------------------------------------------------------ DAG execution
+def test_dag_ordering_and_merged_results(svc):
+    seen = []
+    lock = threading.Lock()
+
+    def record(tag):
+        def fn(doc):
+            with lock:
+                seen.append(tag)
+            return dict(doc, tag=tag)
+        return fn
+
+    fa = svc.register_function(record("a"))
+    fb = svc.register_function(record("b"))
+    fc = svc.register_function(record("c"))
+    wf = Workflow([
+        WorkflowNode("c", fc, deps=["b"]),
+        WorkflowNode("b", fb, deps=["a"]),
+        WorkflowNode("a", fa),
+    ])
+    run = wf.start(svc, {"v": 1})
+    out = run.wait(30)
+    assert seen == ["a", "b", "c"]          # chain executes in dependency order
+    assert out == {"v": 1, "tag": "c"}       # single sink -> bare result
+    assert run.state == "SUCCEEDED"
+    assert [h["node"] for h in run.history] == ["a", "b", "c"]
+
+
+def test_diamond_fanout_fanin_results_and_sibling_batching(svc):
+    def source(doc):
+        return {"v": doc["v"]}
+
+    def double(x):
+        return {"v": x["v"] * 2}
+
+    def plus_one(x):
+        return {"v": x["v"] + 1}
+
+    def join(upstream):
+        return {"sum": upstream["left"]["v"] + upstream["right"]["v"]}
+
+    wf = Workflow([
+        WorkflowNode("src", svc.register_function(source)),
+        WorkflowNode("left", svc.register_function(double), deps=["src"]),
+        WorkflowNode("right", svc.register_function(plus_one), deps=["src"]),
+        WorkflowNode("join", svc.register_function(join), deps=["left", "right"]),
+    ], name="diamond")
+    run = wf.start(svc, {"v": 10})
+    assert run.wait(30) == {"sum": 31}       # (10*2) + (10+1)
+    # fan-in saw both branches; node states all terminal-success
+    assert all(s == "SUCCEEDED" for s in run.node_states.values())
+
+    # the sibling branches travelled as ONE TaskBatch frame: 3 deliveries
+    # total (src), (left+right), (join) — not 4
+    stats = svc.forwarder.stats()
+    assert stats["batches_delivered"] == 3
+    assert stats["tasks_delivered"] == 4
+    hist = svc.metrics.snapshot()["histograms"]["forwarder.batch_size"]
+    assert hist["count"] == 3 and hist["sum"] == 4.0
+
+
+def test_fanout_results_are_per_branch(svc):
+    def source(doc):
+        return doc["base"]
+
+    def scale(k):
+        def fn(x):
+            return x * k
+        return fn
+
+    fid_src = svc.register_function(source)
+    nodes = [WorkflowNode("src", fid_src)]
+    for k in (2, 3, 5):
+        nodes.append(WorkflowNode(
+            f"x{k}", svc.register_function(scale(k)), deps=["src"]
+        ))
+    wf = Workflow(nodes)
+    run = wf.start(svc, {"base": 7})
+    out = run.wait(30)                        # three sinks -> dict of results
+    assert out == {"x2": 14, "x3": 21, "x5": 35}
+
+
+def test_workflow_warm_affinity_hints_children_to_parent_endpoint(svc):
+    ep2 = svc.make_endpoint("wf-ep2", n_executors=1, workers_per_executor=4)
+
+    def step(doc):
+        return doc
+
+    fid = svc.register_function(step)
+    wf = Workflow([
+        WorkflowNode("parent", fid, endpoint_id=ep2.endpoint_id),
+        WorkflowNode("child", fid, deps=["parent"]),
+    ])
+    run = wf.start(svc, {"v": 1})
+    run.wait(30)
+    # the unpinned child followed its parent's warm endpoint
+    assert run.node_endpoint["parent"] == ep2.endpoint_id
+    assert run.node_endpoint["child"] == ep2.endpoint_id
+    hits = svc.metrics.snapshot()["counters"].get("forwarder.affinity_hits", 0)
+    assert hits >= 1
+
+
+# ------------------------------------------------------------ retry / on_error
+def test_node_retry_policy_resubmits_until_success(svc):
+    calls = {"n": 0}
+
+    def flaky(doc):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError(f"transient #{calls['n']}")
+        return {"ok": calls["n"]}
+
+    fid = svc.register_function(flaky)
+    # max_retries=0 disables transport-level retry so the workflow's own
+    # attempt accounting is what drives re-submission
+    wf = Workflow([WorkflowNode("flaky", fid, max_attempts=3, max_retries=0)])
+    run = wf.start(svc, {})
+    assert run.wait(30) == {"ok": 3}
+    assert run.attempts["flaky"] == 3
+    snap = svc.metrics.snapshot()["counters"]
+    assert snap.get("workflow.node_retries", 0) == 2
+    retry_entries = [h for h in run.history if h["state"] == "RETRYING"]
+    assert len(retry_entries) == 2
+
+
+def test_node_retries_exhausted_fails_run(svc):
+    def always_fails(doc):
+        raise ValueError("permanently broken")
+
+    fid = svc.register_function(always_fails)
+    wf = Workflow([
+        WorkflowNode("bad", fid, max_attempts=2, max_retries=0),
+        WorkflowNode("after", fid, deps=["bad"]),
+    ])
+    run = wf.start(svc, {})
+    with pytest.raises(RuntimeError, match="failed"):
+        run.wait(30)
+    assert run.state == "FAILED"
+    assert run.node_states["bad"] == "FAILED"
+    assert run.node_states["after"] == "PENDING"   # never launched
+    assert "bad" in run.error
+
+
+def test_on_error_skip_records_fallback_and_continues(svc):
+    def broken(doc):
+        raise RuntimeError("sensor offline")
+
+    def downstream(upstream):
+        return {"got": upstream}
+
+    f_bad = svc.register_function(broken)
+    f_down = svc.register_function(downstream)
+    wf = Workflow([
+        WorkflowNode("maybe", f_bad, max_retries=0, on_error="skip",
+                     fallback={"v": -1}),
+        WorkflowNode("down", f_down, deps=["maybe"]),
+    ])
+    run = wf.start(svc, {})
+    assert run.wait(30) == {"got": {"v": -1}}
+    assert run.node_states["maybe"] == "SKIPPED"
+    assert run.node_states["down"] == "SUCCEEDED"
+
+
+def test_mid_dag_submission_error_fails_run_not_fabric(svc):
+    """A submission error while launching a child (unknown function id) must
+    fail the run with the real error — not escape through the parent's
+    completion callback into the endpoint manager thread and hang the run."""
+    fid = svc.register_function(lambda doc: doc)
+    wf = Workflow([
+        WorkflowNode("a", fid),
+        WorkflowNode("b", "no-such-function", deps=["a"]),
+    ])
+    run = wf.start(svc, {"v": 1})
+    with pytest.raises(RuntimeError, match="no-such-function"):
+        run.wait(10)
+    assert run.state == "FAILED"
+    assert run.node_states["b"] == "FAILED"
+    # the fabric survived: the endpoint still executes ordinary tasks
+    assert svc.run(fid, {"ok": 1}).result(10) == {"ok": 1}
+
+
+def test_prepare_failure_honors_on_error(svc):
+    def fine(doc):
+        return doc
+
+    fid = svc.register_function(fine)
+
+    def bad_prepare(doc, upstream):
+        raise KeyError("missing field")
+
+    wf = Workflow([WorkflowNode("p", fid, prepare=bad_prepare)])
+    run = wf.start(svc, {})
+    with pytest.raises(RuntimeError):
+        run.wait(30)
+    assert run.state == "FAILED"
+
+
+# ------------------------------------------------------------ cancel
+def test_cancel_mid_dag_detaches_inflight_and_stops_progress(svc):
+    release = threading.Event()
+    downstream_ran = threading.Event()
+
+    def slow(doc):
+        release.wait(10)
+        return doc
+
+    def after(doc):
+        downstream_ran.set()
+        return doc
+
+    f_slow = svc.register_function(slow)
+    f_after = svc.register_function(after)
+    wf = Workflow([
+        WorkflowNode("slow", f_slow),
+        WorkflowNode("after", f_after, deps=["slow"]),
+    ])
+    run = wf.start(svc, {"v": 1})
+    time.sleep(0.05)                    # let `slow` reach a worker
+    inflight = [f for f, _ in run.inflight.values()]
+    assert inflight, "slow node should be in flight"
+    run.cancel()
+    assert run.state == "CANCELLED"
+    assert not run.inflight
+
+    release.set()                       # the in-flight task completes late...
+    assert inflight[0].result(10) == {"v": 1}
+    time.sleep(0.1)
+    assert not downstream_ran.is_set()  # ...but launches nothing further
+    assert run.node_states["after"] == "CANCELLED"
+    with pytest.raises(RuntimeError, match="cancelled"):
+        run.wait(1)
+
+
+def test_flow_cancel_detaches_current_future(svc):
+    """Seed regression: Flow.cancel() left run.current attached, so the
+    in-flight future's completion could still drive the flow."""
+    release = threading.Event()
+    second_ran = threading.Event()
+
+    def slow(doc):
+        release.wait(10)
+        return doc
+
+    def second(doc):
+        second_ran.set()
+        return doc
+
+    f1 = svc.register_function(slow)
+    f2 = svc.register_function(second)
+    flow = Flow([ActionStep(f1, name="slow"), ActionStep(f2, name="second")])
+    run = flow.start(svc, {"v": 1})
+    time.sleep(0.05)
+    current = run.current
+    assert current is not None
+    Flow.cancel(run)
+    assert run.state == "CANCELLED"
+    assert run.current is None          # detached, not merely flagged
+
+    release.set()
+    current.result(10)                  # the task itself still finishes
+    time.sleep(0.1)
+    assert not second_ran.is_set()      # no further step launched
+    assert run.step_index == 0
+
+
+# ------------------------------------------------------------ triggers
+def test_trigger_fires_workflow_run_per_matching_event(svc):
+    def analyze(doc):
+        return {"source": doc["source"], "n": len(doc["item"])}
+
+    fid = svc.register_function(analyze)
+    wf = Workflow([WorkflowNode("analyze", fid)])
+    bus = EventBus()
+    trig = bus.attach(Trigger(
+        wf, svc, name="on-data",
+        predicate=lambda e: e.source == "detector",
+    ))
+    # non-matching source: predicate filters it out
+    bus.publish(DataArrivalEvent("other-site", item=[1]))
+    assert trig.runs == []
+    # matching events: one run each
+    bus.publish(DataArrivalEvent("detector", item=[1, 2, 3]))
+    bus.publish(DataArrivalEvent("detector", item=[4, 5]))
+    assert len(trig.runs) == 2
+    outs = [r.wait(30) for r in trig.runs]
+    assert outs == [{"source": "detector", "n": 3}, {"source": "detector", "n": 2}]
+    counters = svc.metrics.snapshot()["counters"]
+    assert counters["trigger.fired{trigger=on-data}"] == 2
+    assert counters["workflow.runs{state=succeeded}"] >= 2
+
+
+def test_timer_source_fires_trigger(svc):
+    def tick_fn(doc):
+        return {"tick": doc["tick"]}
+
+    fid = svc.register_function(tick_fn)
+    wf = Workflow([WorkflowNode("tick", fid)])
+    bus = EventBus()
+    trig = bus.attach(Trigger(wf, svc, topic="timer", name="cron"))
+    timer = TimerSource(bus, period_s=0.02, max_ticks=3).start()
+    deadline = time.monotonic() + 5.0
+    while len(trig.runs) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    timer.stop()
+    assert len(trig.runs) == 3
+    assert [r.wait(30)["tick"] for r in trig.runs] == [1, 2, 3]
+
+
+def test_trigger_once_disarms_after_first_firing(svc):
+    fid = svc.register_function(lambda doc: doc)
+    wf = Workflow([WorkflowNode("only", fid)])
+    bus = EventBus()
+    trig = bus.attach(Trigger(wf, svc, name="one-shot", once=True))
+    bus.publish(DataArrivalEvent("s", item=1))
+    bus.publish(DataArrivalEvent("s", item=2))
+    assert len(trig.runs) == 1
+    assert trig.fired == 1
+
+
+def test_trigger_prunes_completed_runs_beyond_keep_runs(svc):
+    fid = svc.register_function(lambda doc: doc)
+    wf = Workflow([WorkflowNode("n", fid)])
+    bus = EventBus()
+    trig = bus.attach(Trigger(wf, svc, name="busy", keep_runs=3))
+    for i in range(8):
+        bus.publish(DataArrivalEvent("s", item=i))
+        trig.runs[-1].wait(30)      # completed runs beyond the cap get pruned
+    assert trig.fired == 8
+    assert len(trig.runs) == 3
+    assert [r.output()["item"] for r in trig.runs] == [5, 6, 7]
+
+
+def test_eventbus_handler_errors_are_observable(svc):
+    bus = EventBus(metrics=svc.metrics)
+
+    def bad_handler(event):
+        raise AttributeError("rule bug")
+
+    seen = []
+    bus.subscribe("data.arrival", bad_handler)
+    bus.subscribe("data.arrival", seen.append)
+    n = bus.publish(DataArrivalEvent("s", item=1))
+    assert n == 2
+    assert len(seen) == 1               # the bad rule didn't mute the good one
+    assert bus.errors == 1
+    assert isinstance(bus.last_error, AttributeError)
+    counters = svc.metrics.snapshot()["counters"]
+    assert counters["eventbus.handler_errors"] == 1
+
+
+def test_start_raises_synchronously_on_bad_submission(svc):
+    """Seed parity: Flow.start()/Workflow.start() surfaced unknown-function
+    and auth errors in the caller's frame; a caller that never waits must
+    still see them."""
+    with pytest.raises(KeyError, match="ghost-function"):
+        Workflow([WorkflowNode("a", "ghost-function")]).start(svc, {})
+    with pytest.raises(KeyError, match="ghost-function"):
+        Flow([ActionStep("ghost-function")]).start(svc, {})
+
+
+# ------------------------------------------------------------ Flow shim parity
+def test_flow_shim_parity_with_seed_semantics(svc):
+    """The linear Flow surface: prepare/merge thread one document through the
+    chain exactly as the seed implementation did."""
+    def extract(doc):
+        return {"values": [v * 1.0 for v in doc["raw"]]}
+
+    def reduce_step(doc):
+        return {"mean": sum(doc["values"]) / len(doc["values"])}
+
+    f1 = svc.register_function(extract)
+    f2 = svc.register_function(reduce_step)
+    flow = Flow([
+        ActionStep(f1, name="extract"),
+        ActionStep(f2, name="reduce",
+                   merge=lambda doc, result: dict(doc, **result)),
+    ])
+    run = flow.start(svc, {"raw": list(range(10))})
+    result = Flow.wait(run, timeout=30)
+    assert result["mean"] == 4.5
+    assert result["values"] == [float(v) for v in range(10)]  # merge kept doc
+    assert run.state == "SUCCEEDED"
+    assert run.step_index == 2
+    assert len(run.history) == 2
+    assert [h["step"] for h in run.history] == ["extract", "reduce"]
+    status = Flow.status(run)
+    assert status["state"] == "SUCCEEDED" and status["step"] == 2
+
+
+def test_flow_failure_surfaces_like_seed(svc):
+    def boom(doc):
+        raise ValueError("bad document")
+
+    fid = svc.register_function(boom)
+    flow = Flow([ActionStep(fid, name="boom")])
+    run = flow.start(svc, {"v": 1})
+    with pytest.raises(RuntimeError, match="flow failed"):
+        Flow.wait(run, timeout=30)
+    assert run.state == "FAILED"
+    assert "error" in run.history[-1]
+
+
+def test_flow_deep_chain_advances_iteratively(svc):
+    """Seed regression: Flow._advance recursed through done-callbacks, so a
+    chain of synchronously-completing (memoized) steps grew the stack by a
+    frame per step and a 1000-step chain overflowed. Pre-seeding the memo
+    cache makes every completion synchronous, driving the whole chain on the
+    caller's stack — it must advance in a flat loop."""
+    n_steps = 1000
+
+    def incr(doc):
+        return {"v": doc["v"] + 1}
+
+    fid = svc.register_function(incr, name="incr")
+    for i in range(n_steps):  # every step is a memo hit: no endpoint round-trip
+        svc.memo.put(fid, serializer.payload_hash({"v": i}), {"v": i + 1})
+
+    flow = Flow([ActionStep(fid, memoize=True, name=f"s{i}")
+                 for i in range(n_steps)])
+    run = flow.start(svc, {"v": 0})
+    assert Flow.wait(run, timeout=30) == {"v": n_steps}
+    assert run.step_index == n_steps
+    assert svc.metrics.snapshot()["counters"]["service.memo_hits"] == n_steps
+
+
+# ------------------------------------------------------------ futures as inputs
+def test_run_many_futures_as_inputs_defer_until_resolved(svc):
+    gate = threading.Event()
+
+    def slow_source(doc):
+        gate.wait(10)
+        return {"v": doc["v"] * 10}
+
+    def consume(doc):
+        return {"sum": doc["a"]["v"] + doc["b"]}
+
+    f_src = svc.register_function(slow_source)
+    f_use = svc.register_function(consume)
+    upstream = svc.run(f_src, {"v": 4})
+    dependent = svc.run(f_use, {"a": upstream, "b": 2})
+    assert not dependent.done()          # held back: input still in flight
+    gate.set()
+    assert dependent.result(10) == {"sum": 42}
+
+
+def test_futures_as_inputs_propagate_upstream_failure(svc):
+    def bad(doc):
+        raise RuntimeError("upstream died")
+
+    def consume(doc):
+        return doc
+
+    f_bad = svc.register_function(bad)
+    f_use = svc.register_function(consume)
+    upstream = svc.run(f_bad, {}, max_retries=0)
+    dependent = svc.run(f_use, [upstream])
+    with pytest.raises(RuntimeError, match="upstream died"):
+        dependent.result(10)
+
+
+# ------------------------------------------------------------ metrics surface
+def test_workflow_metrics_in_fabric_snapshot(svc):
+    fid = svc.register_function(lambda doc: doc)
+    wf = Workflow([
+        WorkflowNode("a", fid),
+        WorkflowNode("b", fid, deps=["a"]),
+    ])
+    wf.start(svc, {"v": 1}).wait(30)
+    snap = svc.metrics.snapshot()
+    assert snap["counters"]["workflow.runs{state=started}"] == 1
+    assert snap["counters"]["workflow.runs{state=succeeded}"] == 1
+    assert snap["counters"]["workflow.nodes_completed"] == 2
+    assert snap["histograms"]["workflow.node_latency_s"]["count"] == 2
