@@ -17,6 +17,7 @@ SUITES = (
     "scaling",        # Fig. 6 strong + weak
     "throughput",     # §6.2.3
     "federation",     # multi-endpoint fabric: policies x endpoint counts
+    "heterogeneity",  # §5.3-5.4/§8: typed container pools + capability routing
     "elasticity",     # §5.4 managed elasticity: blocks-over-time under burst
     "workflow",       # §7 pipelines: diamond DAG vs. linear Flow
     "fault",          # Fig. 7

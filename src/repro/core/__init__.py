@@ -37,6 +37,13 @@ from .autoscaler import (  # noqa: F401
     make_policy,
 )
 from .batching import MicroBatcher, stack_payloads, unstack_results  # noqa: F401
+from .containers import (  # noqa: F401
+    CapabilityError,
+    ContainerPool,
+    ContainerSpec,
+    ResourceSpec,
+    default_container_spec,
+)
 from .endpoint import Endpoint  # noqa: F401
 from .executor import Executor  # noqa: F401
 from .forwarder import ENDPOINT_POLICIES, EndpointRecord, Forwarder  # noqa: F401

@@ -71,6 +71,7 @@ class WorkflowNode:
     prepare: Optional[Callable[[Any, Dict[str, Any]], Any]] = None
     endpoint_id: Optional[str] = None
     container: str = "default"
+    requirements: Optional[Sequence[str]] = None  # capability override (None = function's)
     memoize: bool = False
     max_attempts: int = 1
     max_retries: int = 2
@@ -290,6 +291,7 @@ class Workflow:
                     payload=payload,
                     endpoint_id=node.endpoint_id,
                     container=node.container,
+                    requirements=node.requirements,
                     memoize=node.memoize,
                     max_retries=node.max_retries,
                     affinity_hint=None if node.endpoint_id else hint,

@@ -152,7 +152,8 @@ class Autoscaler:
     - ``observe() -> ScalingObservation``
     - ``select_idle_block() -> Optional[(block_id, executor)]`` — a candidate
       whose executor has no queued or in-flight work; the executor must
-      support ``suspend()``/``resume()`` and expose ``in_flight`` + ``inbox``.
+      support ``suspend()``/``resume()`` and expose ``in_flight`` +
+      ``queued_tasks()`` (backlog across its container pools).
     - ``release_block(block_id) -> None`` — drop the executor from the
       host's tables and ``scale_in`` the block at the provider.
     """
@@ -262,7 +263,7 @@ class Autoscaler:
             return False
         block_id, ex = cand
         ex.suspend()
-        if len(ex.in_flight) or ex.inbox.qsize():
+        if len(ex.in_flight) or ex.queued_tasks():
             ex.resume()
             return False
         self.host.release_block(block_id)

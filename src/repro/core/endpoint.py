@@ -18,6 +18,7 @@ from collections import deque
 from typing import Callable, Dict, List, Optional
 
 from .autoscaler import Autoscaler, ScalingObservation, ScalingPolicy
+from .containers import CapabilityError, ContainerSpec, default_container_spec
 from .executor import Executor
 from .futures import TaskEnvelope, TaskFuture, TaskState
 from .heartbeat import HeartbeatMonitor, LatencyTracker
@@ -46,6 +47,8 @@ class Endpoint:
         speculation: bool = False,
         speculation_multiplier: float = 3.0,
         warm_ttl_s: float = 300.0,
+        containers: Optional[List[ContainerSpec]] = None,
+        container_keep_alive_s: Optional[float] = None,
         tick_s: float = 0.001,
         dispatch_interval_s: float = 0.0,
         result_hook: Optional[Callable[[TaskEnvelope, TaskResult], None]] = None,
@@ -69,6 +72,17 @@ class Endpoint:
         self.speculation = speculation
         self.speculation_multiplier = speculation_multiplier
         self.warm_ttl_s = warm_ttl_s
+        # container types every executor on this endpoint hosts; default is
+        # the homogeneous seed shape — one fixed-size cpu pool per executor
+        self.container_specs: List[ContainerSpec] = (
+            list(containers)
+            if containers
+            else [default_container_spec(workers_per_executor)]
+        )
+        self.container_keep_alive_s = container_keep_alive_s
+        # per-block worker ceiling across hosted pools: what one executor
+        # grows to on demand (== workers_per_executor for the default spec)
+        self._block_workers = sum(s.max_workers for s in self.container_specs)
         self.tick_s = tick_s
         # simulated manager<->executor RTT: dispatch rounds happen at most
         # this often (0 = in-process, dispatch on every loop iteration)
@@ -97,7 +111,7 @@ class Endpoint:
                     min_blocks=min(1, n_executors),
                     init_blocks=n_executors,
                     max_blocks=max(max_executors, n_executors),
-                    workers_per_block=workers_per_executor,
+                    workers_per_block=self._block_workers,
                 )
             )
         self.provider = provider
@@ -131,9 +145,10 @@ class Endpoint:
             executor_id=f"{self.name}/{block_id}",
             registry=self.registry,
             result_queue=self.result_queue,
-            n_workers=self.workers_per_executor,
+            containers=self.container_specs,
             prefetch=self.prefetch,
             warm_ttl_s=self.warm_ttl_s,
+            container_keep_alive_s=self.container_keep_alive_s,
             monitor=self.monitor,
             heartbeat_interval_s=self.heartbeat_interval_s,
             metrics=self.metrics,
@@ -184,8 +199,22 @@ class Endpoint:
     # -- fabric-facing surface (consumed by the Forwarder) -------------------
     def capacity(self) -> int:
         """Advertised worker capacity: what the endpoint tells the fabric it
-        can absorb (sum of workers across accepting executors)."""
-        return sum(ex.n_workers for ex in self._executor_list() if ex.accepting())
+        can absorb (sum of per-container worker ceilings across accepting
+        executors — pools grow to these on demand)."""
+        return sum(ex.max_workers for ex in self._executor_list() if ex.accepting())
+
+    def capabilities(self) -> frozenset:
+        """Capability set this endpoint advertises to the fabric: the union
+        over its hosted container specs. Spec-derived (static), not
+        derived from currently-accepting executors: a transient executor
+        outage must let requirement-bearing tasks queue through the
+        replacement window exactly like requirement-free ones, not fail
+        them with a capability error. The Forwarder routes a task here only
+        when its requirements are a subset."""
+        caps: frozenset = frozenset()
+        for spec in self.container_specs:
+            caps |= spec.capabilities
+        return caps
 
     def has_warm(self, key) -> bool:
         """Endpoint-tier warm probe: any accepting executor holds a warm
@@ -300,17 +329,36 @@ class Endpoint:
                 if not self._queue:
                     return
                 head = self._queue[0]
-            ex = self.scheduler.choose(self._executor_list(), head)
+            executors = self._executor_list()
+            ex = self.scheduler.choose(executors, head)
             if ex is None:
-                return
-            want = max(1, ex.free_capacity())
+                accepting = any(e.accepting() for e in executors)
+                if accepting and not self.scheduler.capable(executors, head):
+                    # Live pools exist but none can ever run this task: fail
+                    # it fast with a capability error instead of letting it
+                    # pin the queue head until a watchdog timeout. (The
+                    # Forwarder filters on advertised capabilities, so this
+                    # is the defense-in-depth for specs changing between
+                    # routing and dispatch.) With no accepting executor at
+                    # all the task stays queued — executor replacement or
+                    # fabric-level failover owns that case.
+                    self._fail_incapable(head)
+                    continue
+                return  # capable executors exist but none has capacity now
+            want = max(1, ex.free_capacity_for(head))
             with self._qlock:
                 if not self._queue or self._queue[0] is not head:
                     continue
-                chunk = [
-                    self._queue.popleft()
-                    for _ in range(min(want, len(self._queue)))
-                ]
+                chunk = [self._queue.popleft()]
+                # extend the batch only with tasks this executor can run;
+                # the first incompatible task ends the chunk and leads the
+                # next dispatch round (which picks its own executor)
+                while (
+                    len(chunk) < want
+                    and self._queue
+                    and ex.can_run(self._queue[0])
+                ):
+                    chunk.append(self._queue.popleft())
             now = time.monotonic()
             dispatch_latency = self.metrics.histogram("endpoint.dispatch_latency_s")
             ready: List[TaskEnvelope] = []
@@ -338,6 +386,25 @@ class Endpoint:
                     fut.set_state(TaskState.DISPATCHED)
             ex.submit_batch(ready)
 
+    def _fail_incapable(self, head: TaskEnvelope) -> None:
+        """Pop `head` and fail its future with a capability error: no hosted
+        container pool provides its required capabilities."""
+        with self._qlock:
+            if not self._queue or self._queue[0] is not head:
+                return
+            self._queue.popleft()
+        self.metrics.counter("container.capability_misses").inc()
+        with self._flock:
+            fut = self.futures.pop(head.task_id, None)
+        if fut is not None:
+            fut.set_exception(
+                CapabilityError(
+                    f"endpoint {self.name!r} has no container pool providing "
+                    f"{sorted(head.requirements)} for task {head.task_id} "
+                    f"(advertising {sorted(self.capabilities())})"
+                )
+            )
+
     def _watchdog(self) -> None:
         for eid in self.monitor.dead():
             with self._exlock:
@@ -349,12 +416,8 @@ class Endpoint:
                 continue
             ex.suspend()
             lost = ex.take_in_flight()
-            # also recover tasks sitting in the dead executor's local queue
-            while True:
-                try:
-                    lost.append(ex.inbox.get_nowait())
-                except queue.Empty:
-                    break
+            # also recover tasks sitting in the dead executor's pool queues
+            lost.extend(ex.drain_queued())
             for env in lost:
                 with self._flock:
                     fut = self.futures.get(env.task_id)
@@ -396,7 +459,10 @@ class Endpoint:
             # task before the worker pulls it), so count it alone
             outstanding=sum(len(e.in_flight) for e in accepting),
             blocks=len(accepting),
-            workers_per_block=self.workers_per_executor,
+            # ceiling across hosted container specs, not the default-spec
+            # knob: with custom containers a block grows past
+            # workers_per_executor and the policy must size against that
+            workers_per_block=self._block_workers,
             p95_latency_s=self.tracker.p95(),
         )
 
@@ -410,7 +476,7 @@ class Endpoint:
         for eid, ex in items:
             if not ex.accepting():
                 continue
-            if len(ex.in_flight) or ex.inbox.qsize():
+            if len(ex.in_flight) or ex.queued_tasks():
                 continue
             block_id = block_of.get(eid)
             if block_id is not None:
@@ -444,6 +510,7 @@ class Endpoint:
                     function_id=env.function_id,
                     payload=env.payload,
                     container=env.container,
+                    requirements=env.requirements,
                     memoize=env.memoize,
                     max_retries=0,
                     speculative_of=env.task_id,
@@ -488,7 +555,7 @@ class Endpoint:
         t0 = time.monotonic()
         while time.monotonic() - t0 < timeout:
             busy = self.queue_depth() or any(
-                len(e.in_flight) or e.inbox.qsize() for e in self._executor_list()
+                len(e.in_flight) or e.queued_tasks() for e in self._executor_list()
             )
             if not busy:
                 return True

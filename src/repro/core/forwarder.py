@@ -28,6 +28,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .containers import CapabilityError
 from .futures import TaskEnvelope, TaskFuture
 from .interchange import BatchCoalescer, iter_frames
 from .metrics import SIZE_BUCKETS, MetricsRegistry
@@ -35,6 +36,27 @@ from .metrics import SIZE_BUCKETS, MetricsRegistry
 ENDPOINT_POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
 
 _Pair = Tuple[TaskEnvelope, TaskFuture]
+
+
+def _caps_of(endpoint) -> Optional[frozenset]:
+    """An endpoint's advertised capability set, or None when it has no
+    ``capabilities()`` surface (test fakes, legacy shims)."""
+    caps_fn = getattr(endpoint, "capabilities", None)
+    if caps_fn is None:
+        return None
+    return frozenset(caps_fn())
+
+
+def _endpoint_satisfies(endpoint, requirements, caps=...) -> bool:
+    """Capability check against an endpoint's advertised set. Requirement-free
+    tasks run anywhere; an endpoint without a capability surface can't claim
+    to satisfy any requirement. Callers routing a batch pass a pre-computed
+    `caps` snapshot so the endpoint lock is paid once, not once per task."""
+    if not requirements:
+        return True
+    if caps is ...:
+        caps = _caps_of(endpoint)
+    return caps is not None and set(requirements) <= caps
 
 
 class EndpointRecord:
@@ -214,11 +236,49 @@ class Forwarder:
             return self._choose_record(live, env).endpoint
 
     def _choose_record(
-        self, live: List[EndpointRecord], env: TaskEnvelope
+        self,
+        live: List[EndpointRecord],
+        env: TaskEnvelope,
+        caps_cache: Optional[Dict[str, Optional[frozenset]]] = None,
     ) -> EndpointRecord:
         """Policy selection over a pre-computed live list (callers batching
         many tasks pay the liveness scan once, not once per task). Must be
-        called with the lock held."""
+        called with the lock held.
+
+        The capability filter runs before any policy: only endpoints whose
+        advertised capability set satisfies the task's requirements are
+        candidates, so incapable dispatch is impossible. `caps_cache` (by
+        endpoint id) amortizes the endpoint-lock walk across a batch. A task
+        no live endpoint satisfies raises :class:`CapabilityError` — the
+        caller fails the future fast instead of letting a watchdog time it
+        out."""
+        if not env.requirements:
+            capable = live  # requirement-free: no filter walk on the hot path
+        else:
+            if caps_cache is None:
+                caps_cache = {
+                    r.endpoint.endpoint_id: _caps_of(r.endpoint) for r in live
+                }
+            capable = [
+                r for r in live
+                if _endpoint_satisfies(
+                    r.endpoint, env.requirements,
+                    caps_cache.get(r.endpoint.endpoint_id),
+                )
+            ]
+        if not capable:
+            self.metrics.counter("container.capability_misses").inc()
+            advertised = {
+                r.endpoint.endpoint_id: sorted(caps_cache.get(r.endpoint.endpoint_id) or ())
+                for r in live
+            }
+            raise CapabilityError(
+                f"no live endpoint satisfies requirements "
+                f"{sorted(env.requirements)} for task {env.task_id} "
+                f"(function {env.function_id[:12]}…); live endpoints advertise "
+                f"{advertised}"
+            )
+        live = capable
         if env.affinity_hint is not None:
             # Soft warm-affinity (workflow parent→child): prefer the hinted
             # endpoint while it is live with spare capacity; saturation or
@@ -263,9 +323,10 @@ class Forwarder:
         env: TaskEnvelope,
         future: TaskFuture,
         endpoint_id: Optional[str] = None,
-    ) -> str:
+    ) -> Optional[str]:
         """Route `env` to an endpoint (pinned when `endpoint_id` is given) and
-        track it until its future completes. Returns the chosen endpoint id.
+        track it until its future completes. Returns the chosen endpoint id
+        (None when the future was capability-failed instead of routed).
         A single submit travels the batched pipe as a batch of one."""
         return self.submit_many([(env, future)], endpoint_id=endpoint_id)[0]
 
@@ -273,10 +334,12 @@ class Forwarder:
         self,
         pairs: Sequence[_Pair],
         endpoint_id: Optional[str] = None,
-    ) -> List[str]:
+    ) -> List[Optional[str]]:
         """Route a batch of (envelope, future) pairs, amortizing registry locks
         and delivering one TaskBatch frame per chosen endpoint. Returns the
-        chosen endpoint id for each pair, in order.
+        chosen endpoint id for each pair, in order — None for a pair whose
+        future was failed fast with a :class:`CapabilityError` (no live
+        endpoint, pinned or otherwise, satisfies its requirements).
 
         With ``max_delay_s > 0`` the routed pairs land in per-endpoint submit
         queues and the pump delivers them (flush-on-size happens inline);
@@ -284,20 +347,36 @@ class Forwarder:
         pairs = list(pairs)
         if not pairs:
             return []
-        chosen: List[str] = []
+        chosen: List[Optional[str]] = []
+        routed_pairs: List[_Pair] = []
+        rejected: List[Tuple[TaskFuture, CapabilityError]] = []
         deliveries: Dict[str, Tuple[EndpointRecord, List[_Pair]]] = {}
         with self._lock:
             pinned: Optional[EndpointRecord] = None
+            pinned_caps: Optional[frozenset] = None
             if endpoint_id is not None:
                 pinned = self._records.get(endpoint_id)
                 if pinned is None:
                     raise KeyError(f"unknown endpoint {endpoint_id!r}; register one first")
                 if not self._is_live(pinned):
                     pinned = None  # pinned endpoint died: fall back to policy routing
+                else:
+                    pinned_caps = _caps_of(pinned.endpoint)
             live: Optional[List[EndpointRecord]] = None
+            caps_cache: Optional[Dict[str, Optional[frozenset]]] = None
             decisions = 0
             for env, future in pairs:
                 rec = pinned
+                if rec is not None and not _endpoint_satisfies(
+                    rec.endpoint, env.requirements, pinned_caps
+                ):
+                    self.metrics.counter("container.capability_misses").inc()
+                    rejected.append((future, CapabilityError(
+                        f"pinned endpoint {endpoint_id!r} does not provide "
+                        f"{sorted(env.requirements)} required by task {env.task_id}"
+                    )))
+                    chosen.append(None)
+                    continue
                 if rec is None:
                     if live is None:  # liveness scan paid once per batch
                         live = self._live_records()
@@ -305,7 +384,21 @@ class Forwarder:
                         raise RuntimeError(
                             "no live endpoints registered with the forwarder"
                         )
-                    rec = self._choose_record(live, env)
+                    if caps_cache is None and env.requirements:
+                        # capability snapshot paid once per batch, like the
+                        # liveness scan — not once per task under the lock
+                        caps_cache = {
+                            r.endpoint.endpoint_id: _caps_of(r.endpoint)
+                            for r in live
+                        }
+                    try:
+                        rec = self._choose_record(live, env, caps_cache)
+                    except CapabilityError as exc:
+                        # fail fast through the future: the rest of the batch
+                        # still routes (capability misses are per-task)
+                        rejected.append((future, exc))
+                        chosen.append(None)
+                        continue
                     decisions += 1
                 eid = rec.endpoint.endpoint_id
                 rec.outstanding[env.task_id] = env
@@ -314,15 +407,18 @@ class Forwarder:
                 self._task_endpoint[env.task_id] = eid
                 future.endpoint_id = eid
                 chosen.append(eid)
+                routed_pairs.append((env, future))
                 deliveries.setdefault(eid, (rec, []))[1].append((env, future))
-            self.metrics.counter("forwarder.tasks_routed").inc(len(pairs))
+            self.metrics.counter("forwarder.tasks_routed").inc(len(routed_pairs))
             if decisions:  # one bulk inc, not one per task inside the lock
                 self.metrics.counter(
                     "forwarder.routing_decisions", {"policy": self.policy}
                 ).inc(decisions)
             for rec, _ in deliveries.values():
                 rec.sync_outstanding()
-        for env, future in pairs:
+        for future, exc in rejected:
+            future.set_exception(exc)
+        for env, future in routed_pairs:
             future.add_done_callback(lambda f, tid=env.task_id: self._on_done(tid, f))
         # deliver via the record captured at routing time: a concurrent
         # deregister() must not strand already-routed tasks undelivered
@@ -414,15 +510,26 @@ class Forwarder:
                         )
 
     # -- capacity-proportional sharding ---------------------------------------
-    def shard(self, n: int) -> List[Tuple[str, int]]:
+    def shard(self, n: int, requirements=()) -> List[Tuple[str, int]]:
         """Split an n-task fan-out across live endpoints proportional to their
-        advertised capacity (largest-remainder allocation)."""
+        advertised capacity (largest-remainder allocation). With
+        `requirements`, only capability-satisfying endpoints receive shards."""
         with self._lock:
             live = self._live_records()
             if not live:
                 raise RuntimeError("no live endpoints registered with the forwarder")
-            caps = [max(1, rec.endpoint.capacity()) for rec in live]
-            ids = [rec.endpoint.endpoint_id for rec in live]
+            capable = [
+                rec for rec in live
+                if _endpoint_satisfies(rec.endpoint, requirements)
+            ]
+            if not capable:
+                self.metrics.counter("container.capability_misses").inc()
+                raise CapabilityError(
+                    f"no live endpoint satisfies requirements "
+                    f"{sorted(requirements)} for a {n}-task fan-out"
+                )
+            caps = [max(1, rec.endpoint.capacity()) for rec in capable]
+            ids = [rec.endpoint.endpoint_id for rec in capable]
         total = sum(caps)
         quotas = [n * c / total for c in caps]
         counts = [int(q) for q in quotas]
@@ -523,9 +630,14 @@ class Forwarder:
                     continue
                 self.orphaned += 1
                 self.metrics.counter("forwarder.orphaned").inc()
-                future.set_exception(
-                    RuntimeError(f"task {env.task_id} lost: {exc}")
+                # a capability miss keeps its type so callers can tell
+                # "no capable survivor" from generic endpoint loss
+                wrapped: RuntimeError = (
+                    CapabilityError(f"task {env.task_id} lost: {exc}")
+                    if isinstance(exc, CapabilityError)
+                    else RuntimeError(f"task {env.task_id} lost: {exc}")
                 )
+                future.set_exception(wrapped)
         for eid, routed in deliveries.items():
             with self._lock:
                 rec = self._records.get(eid)

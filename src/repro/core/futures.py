@@ -13,7 +13,7 @@ import threading
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 
 class TaskState(enum.Enum):
@@ -69,7 +69,12 @@ class TaskEnvelope:
     task_id: str
     function_id: str
     payload: bytes                      # serialized input document
-    container: str = "default"          # executable-variant key (container analogue)
+    container: str = "default"          # container type / warm-cache variant key
+    # Capabilities the executing container pool must provide (resolved from
+    # the RegisteredFunction's ResourceSpec at submission). The Forwarder and
+    # Scheduler route only where these are satisfied; a task no live endpoint
+    # can satisfy fails fast with a CapabilityError.
+    requirements: Tuple[str, ...] = ()
     memoize: bool = False
     max_retries: int = 2
     retries: int = 0
@@ -91,6 +96,7 @@ class TaskEnvelope:
             function_id=self.function_id,
             payload=self.payload,
             container=self.container,
+            requirements=self.requirements,
             memoize=self.memoize,
             max_retries=self.max_retries,
             retries=self.retries + 1,

@@ -12,7 +12,9 @@ import inspect
 import textwrap
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, Optional, Union
+
+from .containers import ResourceSpec
 
 
 def hash_function(fn: Callable, static: Any = None) -> str:
@@ -54,6 +56,9 @@ class RegisteredFunction:
     description: str = ""
     owner: str = "anonymous"
     public: bool = False
+    # what this function requires from the fabric: capabilities the executing
+    # container pool must provide + the container variant it prefers
+    requirements: ResourceSpec = field(default_factory=ResourceSpec)
     # serving hints
     batchable: bool = False       # payloads may be stacked on a leading axis
     deterministic: bool = True    # eligible for memoization
@@ -75,10 +80,16 @@ class FunctionRegistry:
         owner: str = "anonymous",
         public: bool = False,
         static: Any = None,
+        requirements: Union[ResourceSpec, Iterable[str], None] = None,
         batchable: bool = False,
         deterministic: bool = True,
         **metadata: Any,
     ) -> str:
+        if requirements is None:
+            requirements = ResourceSpec()
+        elif not isinstance(requirements, ResourceSpec):
+            # a bare capability iterable is the common shorthand
+            requirements = ResourceSpec(capabilities=frozenset(requirements))
         fid = hash_function(fn, static=static)
         with self._lock:
             if fid not in self._functions:
@@ -89,6 +100,7 @@ class FunctionRegistry:
                     description=description,
                     owner=owner,
                     public=public,
+                    requirements=requirements,
                     batchable=batchable,
                     deterministic=deterministic,
                     metadata=dict(metadata),
@@ -111,5 +123,10 @@ class FunctionRegistry:
             return list(self._functions.values())
 
     def authorized(self, function_id: str, identity: str) -> bool:
+        """Invocation permission: the owner themselves, or anyone when the
+        owner explicitly opted in with ``public=True``. Ownership is a strict
+        identity comparison — an anonymous-owned function is only open to the
+        anonymous identity (the no-authority deployment), never a wildcard
+        that makes every unowned function world-executable."""
         rf = self.get(function_id)
-        return rf.public or rf.owner in ("anonymous", identity)
+        return rf.public or rf.owner == identity

@@ -28,6 +28,7 @@ from . import auth as auth_mod
 from . import serializer
 from .auth import Token, TokenAuthority
 from .batching import stack_payloads, unstack_results
+from .containers import ResourceSpec
 from .endpoint import Endpoint
 from .forwarder import Forwarder
 from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
@@ -51,6 +52,10 @@ class Invocation:
     payload: Any
     endpoint_id: Optional[str] = None
     container: str = "default"
+    # Per-invocation capability override; None inherits the registered
+    # function's ResourceSpec capabilities. A task travels the fabric only
+    # through endpoints/pools providing every listed capability.
+    requirements: Optional[Sequence[str]] = None
     memoize: bool = False
     max_retries: int = 2
     affinity_hint: Optional[str] = None
@@ -128,12 +133,14 @@ class FunctionService:
         name: Optional[str] = None,
         description: str = "",
         public: bool = False,
+        requirements: "ResourceSpec | Sequence[str] | None" = None,
         token: Optional[Token] = None,
         **metadata: Any,
     ) -> str:
         owner = self._identity(token, auth_mod.SCOPE_REGISTER_FUNCTION)
         return self.registry.register(
-            fn, name=name, description=description, owner=owner, public=public, **metadata
+            fn, name=name, description=description, owner=owner, public=public,
+            requirements=requirements, **metadata
         )
 
     def register_endpoint(
@@ -199,9 +206,9 @@ class FunctionService:
 
             inputs = [] if wire else _scan_futures(inv.payload)
             if inputs:
-                self._submit_deferred(inv, future, inputs, memoizable, wire)
+                self._submit_deferred(inv, rf, future, inputs, memoizable, wire)
                 continue
-            env = self._build_envelope(inv, future, inv.payload, memoizable, wire)
+            env = self._build_envelope(inv, rf, future, inv.payload, memoizable, wire)
             if env is not None:  # None = served from the memo cache
                 groups.setdefault(inv.endpoint_id, []).append((env, future))
         for endpoint_id, pairs in groups.items():
@@ -211,6 +218,7 @@ class FunctionService:
     def _build_envelope(
         self,
         inv: Invocation,
+        rf,
         future: TaskFuture,
         payload: Any,
         memoizable: bool,
@@ -226,11 +234,22 @@ class FunctionService:
                 self.metrics.counter("service.memo_hits").inc()
                 future.set_result(value, state=TaskState.MEMOIZED)
                 return None
+        # capability resolution: per-invocation override, else the function's
+        # registered ResourceSpec; the default container name defers to the
+        # function's preferred container variant
+        if inv.requirements is not None:
+            requirements = tuple(sorted(inv.requirements))
+        else:
+            requirements = tuple(sorted(rf.requirements.capabilities))
+        container = inv.container
+        if container == "default" and rf.requirements.preferred_container:
+            container = rf.requirements.preferred_container
         env = TaskEnvelope(
             task_id=future.task_id,
             function_id=inv.function_id,
             payload=payload if wire else serializer.packb(payload),
-            container=inv.container,
+            container=container,
+            requirements=requirements,
             memoize=digest is not None,
             max_retries=inv.max_retries,
             affinity_hint=inv.affinity_hint,
@@ -244,6 +263,7 @@ class FunctionService:
     def _submit_deferred(
         self,
         inv: Invocation,
+        rf,
         future: TaskFuture,
         inputs: List[TaskFuture],
         memoizable: bool,
@@ -268,7 +288,7 @@ class FunctionService:
                 return
             try:
                 payload = _resolve_futures(inv.payload)
-                env = self._build_envelope(inv, future, payload, memoizable, wire)
+                env = self._build_envelope(inv, rf, future, payload, memoizable, wire)
                 if env is not None:
                     self.forwarder.submit(env, future, endpoint_id=inv.endpoint_id)
             except BaseException as exc:  # noqa: BLE001 - must reach the future
@@ -283,6 +303,7 @@ class FunctionService:
         payloads: Sequence[Any],
         endpoint_id: Optional[str] = None,
         container: str = "default",
+        requirements: Optional[Sequence[str]] = None,
         memoize: bool = False,
         max_retries: int = 2,
         token: Optional[Token] = None,
@@ -296,6 +317,7 @@ class FunctionService:
                     payload=payload,
                     endpoint_id=endpoint_id,
                     container=container,
+                    requirements=requirements,
                     memoize=memoize,
                     max_retries=max_retries,
                 )
@@ -310,6 +332,7 @@ class FunctionService:
         payload: Any,
         endpoint_id: Optional[str] = None,
         container: str = "default",
+        requirements: Optional[Sequence[str]] = None,
         memoize: bool = False,
         sync: bool = False,
         max_retries: int = 2,
@@ -321,6 +344,7 @@ class FunctionService:
             [payload],
             endpoint_id,
             container=container,
+            requirements=requirements,
             memoize=memoize,
             max_retries=max_retries,
             token=token,
@@ -376,9 +400,12 @@ class FunctionService:
             and self.forwarder.live_count() > 1
         ):
             kwargs.pop("user_batched", None)  # falsy here; _submit_tasks doesn't take it
+            req = kwargs.get("requirements")
+            if req is None:
+                req = tuple(sorted(self.registry.get(function_id).requirements.capabilities))
             futs: List[TaskFuture] = []
             start = 0
-            for eid, count in self.forwarder.shard(len(payloads)):
+            for eid, count in self.forwarder.shard(len(payloads), requirements=req):
                 if count:  # each shard travels as one pinned batch
                     futs.extend(
                         self._submit_tasks(

@@ -3,8 +3,14 @@
 funcX workers "persist within containers and each executes one function at a
 time ... once a function is received it is deserialized and executed, and the
 serialized results are returned via the executor." Here a worker is a thread
-(on TPU: pinned to a device slice); the container is the warm executable it
-runs inside (see `warming.py`).
+(on TPU: pinned to a device slice); it persists within one
+:class:`~repro.core.containers.ContainerPool` and the container is the warm
+executable it runs inside (see `warming.py`).
+
+Idle workers block on the pool inbox — no timeout-poll — so hundreds of idle
+workers across container pools burn no CPU. Retirement is a stop-sentinel
+(:data:`Worker.STOP`) delivered through the same inbox: tasks queued ahead of
+the sentinel still execute, then the worker exits.
 """
 from __future__ import annotations
 
@@ -13,17 +19,18 @@ import threading
 import time
 import traceback
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import TYPE_CHECKING, Any, Callable, Optional
 
 from . import serializer
-from .futures import TaskEnvelope
-from .registry import FunctionRegistry, RegisteredFunction
-from .warming import WarmPool
+
+if TYPE_CHECKING:  # imported lazily to avoid a registry<->containers cycle
+    from .registry import RegisteredFunction
+    from .warming import WarmPool
 
 
 @dataclass
 class TaskResult:
-    envelope: TaskEnvelope
+    envelope: Any                     # TaskEnvelope
     value: Any = None                 # deserialized result (or bytes if wire=True)
     error: Optional[str] = None
     exception: Optional[BaseException] = None
@@ -33,12 +40,31 @@ class TaskResult:
     batch_id: Optional[str] = None    # TaskBatch frame this task arrived in
 
 
+def strip_traceback(exc: BaseException) -> BaseException:
+    """Drop the traceback (frames + their locals) from `exc` and its
+    cause/context chain. A TaskResult's exception outlives the task for as
+    long as the caller holds the future; carrying live frames across the
+    executor boundary would pin every local of the failed call for that
+    lifetime. The formatted traceback string in TaskResult.error survives.
+    """
+    seen = set()
+    stack = [exc]
+    while stack:
+        e = stack.pop()
+        if e is None or id(e) in seen:
+            continue
+        seen.add(id(e))
+        e.__traceback__ = None
+        stack.extend((e.__cause__, e.__context__))
+    return exc
+
+
 class _JaxExecutable:
     """jit-wrapped registered function; AOT-compiles on construction when a
     sample payload is available (so WarmPool timing captures the real compile
     cost, the Table-4 'container instantiation' analogue)."""
 
-    def __init__(self, rf: RegisteredFunction, sample_payload: Any = None):
+    def __init__(self, rf: "RegisteredFunction", sample_payload: Any = None):
         import jax
 
         jit_kwargs = rf.metadata.get("jit_kwargs", {})
@@ -56,21 +82,33 @@ class _JaxExecutable:
         return jax.block_until_ready(out)
 
 
-def build_executable(rf: RegisteredFunction, sample_payload: Any = None) -> Callable:
+def build_executable(rf: "RegisteredFunction", sample_payload: Any = None) -> Callable:
+    # Simulated container instantiation cost (paper Table 4: funcX containers
+    # take seconds to boot). Benchmarks use this to make cold starts
+    # deterministic — XLA's in-process executable cache makes *re*-compiles of
+    # identical HLO nearly free, which would otherwise hide the cost a second
+    # endpoint pays to warm up.
+    boot_s = rf.metadata.get("container_boot_s", 0.0)
+    if boot_s:
+        time.sleep(boot_s)
     if rf.metadata.get("jax_jit", False):
         return _JaxExecutable(rf, sample_payload)
     return rf.fn
 
 
 class Worker(threading.Thread):
+    #: stop sentinel: delivered through the inbox so a blocked worker wakes
+    #: exactly once to retire (one sentinel stops one worker)
+    STOP = object()
+
     def __init__(
         self,
         worker_id: str,
-        inbox: "queue.Queue[TaskEnvelope]",
+        inbox: "queue.Queue",
         outbox: "queue.Queue[TaskResult]",
-        registry: FunctionRegistry,
-        warm_pool: WarmPool,
-        poll_s: float = 0.01,
+        registry,
+        warm_pool: "WarmPool",
+        on_stop: Optional[Callable[[], None]] = None,
     ):
         super().__init__(name=worker_id, daemon=True)
         self.worker_id = worker_id
@@ -78,8 +116,9 @@ class Worker(threading.Thread):
         self.outbox = outbox
         self.registry = registry
         self.warm_pool = warm_pool
-        self.poll_s = poll_s
-        self._stop_event = threading.Event()
+        # invoked when a STOP sentinel is consumed (pool bookkeeping: the
+        # sentinel is no longer pending in the shared inbox)
+        self._on_stop = on_stop
         self._drop_inflight = threading.Event()  # simulated node failure
         self.busy = False
         self.executed = 0
@@ -88,29 +127,33 @@ class Worker(threading.Thread):
     def simulate_failure(self) -> None:
         """Drop whatever is executing, produce no results, stop the loop."""
         self._drop_inflight.set()
-        self._stop_event.set()
 
     def stop(self) -> None:
-        self._stop_event.set()
+        """Graceful retirement: tasks already queued ahead of the sentinel
+        still execute; the worker consuming the sentinel exits."""
+        self.inbox.put(Worker.STOP)
 
     # -- main loop --------------------------------------------------------
     def run(self) -> None:
-        while not self._stop_event.is_set():
-            try:
-                env = self.inbox.get(timeout=self.poll_s)
-            except queue.Empty:
-                continue
+        while True:
+            item = self.inbox.get()  # blocking: idle workers burn no CPU
+            if item is Worker.STOP:
+                if self._on_stop is not None:
+                    self._on_stop()
+                return
+            if self._drop_inflight.is_set():
+                return  # vanish without reporting — watchdog must recover
             self.busy = True
             try:
-                result = self._execute(env)
+                result = self._execute(item)
             finally:
                 self.busy = False
             if self._drop_inflight.is_set():
-                return  # vanish without reporting — watchdog must recover
+                return  # killed mid-task: the result vanishes with the node
             self.outbox.put(result)
             self.executed += 1
 
-    def _execute(self, env: TaskEnvelope) -> TaskResult:
+    def _execute(self, env) -> TaskResult:
         env.timestamps.exec_start = time.monotonic()
         try:
             rf = self.registry.get(env.function_id)
@@ -131,10 +174,14 @@ class Worker(threading.Thread):
             )
         except BaseException as exc:  # noqa: BLE001 — report, don't die
             env.timestamps.exec_end = time.monotonic()
+            error = f"{type(exc).__name__}: {exc}\n{traceback.format_exc(limit=5)}"
             return TaskResult(
                 envelope=env,
-                error=f"{type(exc).__name__}: {exc}\n{traceback.format_exc(limit=5)}",
-                exception=exc,
+                error=error,
+                # the exception crosses the executor boundary without its
+                # traceback: live frames (and their locals) must not stay
+                # pinned for the lifetime of the result/memo cache
+                exception=strip_traceback(exc),
                 worker_id=self.worker_id,
                 batch_id=env.batch_id,
             )

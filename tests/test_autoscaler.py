@@ -40,6 +40,9 @@ class FakeExecutor:
         self.resume_calls = 0
         self.suspended = False
 
+    def queued_tasks(self):
+        return self.inbox.qsize()
+
     def suspend(self):
         self.suspend_calls += 1
         self.suspended = True

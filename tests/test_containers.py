@@ -1,0 +1,347 @@
+"""Heterogeneous container fabric: typed worker pools + capability-aware
+routing end to end (paper §5.3–5.4 container management, §8 resource-aware
+scheduling)."""
+import gc
+import queue
+import time
+import weakref
+
+import pytest
+
+from repro.core import (
+    CapabilityError,
+    ContainerPool,
+    ContainerSpec,
+    FunctionRegistry,
+    FunctionService,
+    Invocation,
+    ResourceSpec,
+    WarmPool,
+    default_container_spec,
+)
+
+
+def _echo(doc):
+    return doc
+
+
+def _accel_spec(max_workers=2, name="accel"):
+    return ContainerSpec(
+        name=name, capabilities=frozenset({"cpu", "accel"}),
+        min_workers=0, max_workers=max_workers,
+    )
+
+
+# ---------------------------------------------------------------- specs
+def test_container_spec_validation():
+    with pytest.raises(ValueError):
+        ContainerSpec(name="bad", max_workers=0)
+    with pytest.raises(ValueError):
+        ContainerSpec(name="bad", min_workers=5, max_workers=2)
+    spec = ContainerSpec(name="tpu", capabilities="tpu")  # lone string = 1 cap
+    assert spec.capabilities == frozenset({"tpu"})
+    assert spec.provides(()) and spec.provides({"tpu"})
+    assert not spec.provides({"tpu", "gpu"})
+
+
+def test_resource_spec_satisfied_by():
+    spec = ResourceSpec(capabilities=("tpu", "cpu"))
+    assert spec.satisfied_by({"tpu", "cpu", "extra"})
+    assert not spec.satisfied_by({"cpu"})
+    assert ResourceSpec().satisfied_by(())  # requirement-free runs anywhere
+
+
+# ---------------------------------------------------------------- pools
+def _make_pool(spec):
+    reg = FunctionRegistry()
+    outbox = queue.Queue()
+    pool = ContainerPool(
+        spec=spec, executor_id="ex0", outbox=outbox,
+        registry=reg, warm_pool=WarmPool(),
+    )
+    return pool, reg, outbox
+
+
+def _env_for(reg, fid, i=0):
+    from repro.core import TaskEnvelope, packb
+
+    return TaskEnvelope(task_id=f"t{i}", function_id=fid, payload=packb({"i": i}))
+
+
+def test_pool_spins_up_on_demand_and_shrinks_idle():
+    pool, reg, outbox = _make_pool(_accel_spec(max_workers=3))
+    assert pool.live_workers() == 0  # min_workers=0: nothing runs while idle
+    fid = reg.register(_echo)
+    pool.submit([_env_for(reg, fid, i) for i in range(2)])
+    assert 1 <= pool.live_workers() <= 3  # demand-driven spin-up
+    for _ in range(2):
+        outbox.get(timeout=5)
+    # continuously idle past the keep-alive: surplus workers retire
+    deadline = time.monotonic() + 5
+    while pool.live_workers() > 0 and time.monotonic() < deadline:
+        pool.shrink_idle(keep_alive_s=0.01)
+        time.sleep(0.02)
+    assert pool.live_workers() == 0
+    assert pool.shrinks >= 1
+    pool.stop()
+
+
+def test_submit_racing_shrink_still_executes():
+    """Regression: a task submitted right after shrink_idle() enqueues its
+    stop sentinels must still execute. Doomed-but-alive workers don't count
+    as capacity (pending-sentinel accounting), so the racing submit spins up
+    a fresh worker instead of stranding the task in a dying pool."""
+    pool, reg, outbox = _make_pool(_accel_spec(max_workers=4))
+    fid = reg.register(_echo)
+    pool.submit([_env_for(reg, fid, i) for i in range(4)])
+    for _ in range(4):
+        outbox.get(timeout=5)
+    # retire everything; workers haven't necessarily consumed the sentinels
+    # yet when the next submit arrives — exactly the race window
+    assert pool.shrink_idle(keep_alive_s=0.0) > 0
+    pool.submit([_env_for(reg, fid, 99)])
+    res = outbox.get(timeout=5)  # must not hang
+    assert res.error is None
+    assert pool.queued() == 0  # sentinels are not backlog
+    pool.stop()
+
+
+def test_pool_respects_max_workers():
+    pool, reg, outbox = _make_pool(_accel_spec(max_workers=2))
+    fid = reg.register(_echo)
+    pool.submit([_env_for(reg, fid, i) for i in range(10)])
+    assert pool.live_workers() <= 2
+    for _ in range(10):
+        outbox.get(timeout=5)
+    pool.stop()
+
+
+def test_pool_keeps_min_workers_alive():
+    spec = ContainerSpec(name="c", capabilities={"cpu"}, min_workers=2, max_workers=4)
+    pool, reg, outbox = _make_pool(spec)
+    assert pool.live_workers() == 2  # persist within the container (§5.3)
+    assert pool.shrink_idle(keep_alive_s=0.0) == 0  # never below the floor
+    assert pool.live_workers() == 2
+    pool.stop()
+
+
+def test_pool_stop_joins_cleanly():
+    """Blocking-get workers retire via stop sentinels: no timeout-poll, and a
+    full stop still joins every (idle) worker thread."""
+    pool, reg, outbox = _make_pool(
+        ContainerSpec(name="c", capabilities={"cpu"}, min_workers=3, max_workers=3)
+    )
+    fid = reg.register(_echo)
+    pool.submit([_env_for(reg, fid, i) for i in range(6)])
+    for _ in range(6):
+        outbox.get(timeout=5)
+    workers = list(pool._workers)
+    pool.stop(join=True)
+    deadline = time.monotonic() + 2
+    while any(w.is_alive() for w in workers) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not any(w.is_alive() for w in workers)
+
+
+def test_kill_unblocks_idle_workers():
+    """Regression: killed pools must not strand idle workers blocked on the
+    inbox forever — kill() wakes each one with a sentinel so the threads
+    exit instead of leaking across kill/replace cycles."""
+    pool, reg, outbox = _make_pool(
+        ContainerSpec(name="c", capabilities={"cpu"}, min_workers=2, max_workers=2)
+    )
+    workers = list(pool._workers)
+    assert all(w.is_alive() for w in workers)
+    pool.kill()
+    deadline = time.monotonic() + 2
+    while any(w.is_alive() for w in workers) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not any(w.is_alive() for w in workers)
+
+
+def test_worker_stop_sentinel_drains_queued_work_first():
+    pool, reg, outbox = _make_pool(
+        ContainerSpec(name="c", capabilities={"cpu"}, min_workers=1, max_workers=1)
+    )
+    fid = reg.register(_echo)
+    pool.submit([_env_for(reg, fid, i) for i in range(3)])
+    pool.stop(join=False)  # sentinel queued behind the 3 tasks
+    got = [outbox.get(timeout=5) for _ in range(3)]
+    assert all(r.error is None for r in got)
+
+
+# ---------------------------------------------------------------- end to end
+def _mixed_fabric():
+    svc = FunctionService()
+    cpu_ep = svc.make_endpoint("cpu-site", n_executors=1, workers_per_executor=2)
+    accel_ep = svc.make_endpoint(
+        "accel-site", n_executors=1,
+        containers=[default_container_spec(2), _accel_spec()],
+    )
+    return svc, cpu_ep, accel_ep
+
+
+def test_capability_routing_pins_to_capable_endpoint():
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        fid = svc.register_function(
+            _echo, name="accel_fn",
+            requirements=ResourceSpec({"accel"}, preferred_container="accel"),
+        )
+        futs = [svc.run(fid, {"i": i}) for i in range(8)]
+        assert [f.result(10)["i"] for f in futs] == list(range(8))
+        # every task was routed to the only capable endpoint
+        assert {f.endpoint_id for f in futs} == {accel_ep.endpoint_id}
+        assert cpu_ep.completed == 0
+        assert accel_ep.completed == 8
+    finally:
+        svc.shutdown()
+
+
+def test_endpoint_advertises_pool_union():
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        assert cpu_ep.capabilities() == frozenset({"cpu"})
+        assert accel_ep.capabilities() == frozenset({"cpu", "accel"})
+    finally:
+        svc.shutdown()
+
+
+def test_unsatisfiable_requirements_fail_fast():
+    """Acceptance: a task whose ResourceSpec no live endpoint satisfies fails
+    with a CapabilityError immediately — no watchdog timeout."""
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        fid = svc.register_function(_echo, name="gpu_fn", requirements=("gpu",))
+        t0 = time.monotonic()
+        fut = svc.run(fid, {"i": 1})
+        with pytest.raises(CapabilityError, match="gpu"):
+            fut.result(timeout=1)
+        assert time.monotonic() - t0 < 1.0  # failed fast, not timed out
+        snap = svc.metrics.snapshot()
+        assert snap["counters"]["container.capability_misses"] >= 1
+    finally:
+        svc.shutdown()
+
+
+def test_pinned_endpoint_capability_mismatch_fails_fast():
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        fid = svc.register_function(_echo, name="accel_fn2", requirements=("accel",))
+        fut = svc.run(fid, {"i": 1}, endpoint_id=cpu_ep.endpoint_id)
+        with pytest.raises(CapabilityError, match="pinned"):
+            fut.result(timeout=1)
+    finally:
+        svc.shutdown()
+
+
+def test_mixed_batch_partial_capability_failure():
+    """One incapable invocation fails alone; its batch siblings still route."""
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        ok = svc.register_function(_echo, name="ok_fn")
+        bad = svc.register_function(lambda d: d, name="gpu_fn", requirements=("gpu",))
+        futs = svc.run_many([
+            Invocation(function_id=ok, payload={"i": 0}),
+            Invocation(function_id=bad, payload={"i": 1}),
+            Invocation(function_id=ok, payload={"i": 2}),
+        ])
+        assert futs[0].result(10)["i"] == 0
+        assert futs[2].result(10)["i"] == 2
+        with pytest.raises(CapabilityError):
+            futs[1].result(1)
+    finally:
+        svc.shutdown()
+
+
+def test_failover_orphans_with_capability_error_when_no_capable_survivor():
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        fid = svc.register_function(
+            lambda d: (time.sleep(d.get("t", 0.0)), d)[1],
+            name="slow_accel", requirements=("accel",),
+        )
+        futs = [svc.run(fid, {"i": i, "t": 2.0}) for i in range(2)]
+        time.sleep(0.1)
+        accel_ep.kill()  # only capable endpoint dies mid-task
+        # fabric watchdog fails the stranded tasks over; the cpu endpoint
+        # cannot satisfy {"accel"}, so they orphan with a CapabilityError
+        for fut in futs:
+            with pytest.raises(CapabilityError):
+                fut.result(timeout=10)
+    finally:
+        svc.shutdown()
+
+
+def test_map_shards_only_across_capable_endpoints():
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        fid = svc.register_function(_echo, name="accel_map", requirements=("accel",))
+        outs = svc.map(fid, [{"i": i} for i in range(10)], timeout=20)
+        assert [o["i"] for o in outs] == list(range(10))
+        assert cpu_ep.completed == 0 and accel_ep.completed == 10
+    finally:
+        svc.shutdown()
+
+
+def test_container_metrics_published():
+    svc, cpu_ep, accel_ep = _mixed_fabric()
+    try:
+        fid = svc.register_function(_echo, name="m_fn", requirements=("accel",))
+        [f.result(10) for f in (svc.run(fid, {"i": i}) for i in range(3))]
+        for ex in accel_ep.executors.values():
+            ex.maintain()
+        snap = svc.metrics.snapshot()
+        gauges = snap["gauges"]
+        sizes = {k: v for k, v in gauges.items() if k.startswith("container.pool_size")}
+        assert any("container=accel" in k for k in sizes), sizes
+        depths = [k for k in gauges if k.startswith("container.queue_depth")]
+        assert depths
+    finally:
+        svc.shutdown()
+
+
+def test_seed_container_names_still_work_as_cache_keys():
+    """Seed parity: container names with no matching spec and no requirements
+    land in the default pool, warm-keyed by the requested variant name."""
+    svc = FunctionService()
+    ep = svc.make_endpoint("plain", n_executors=1, workers_per_executor=2)
+    try:
+        fid = svc.register_function(_echo, name="variant_fn")
+        assert svc.run(fid, {"i": 1}, container="variant-a", sync=True, timeout=10)["i"] == 1
+        assert ep.has_warm((fid, "variant-a"))
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------- tracebacks
+_canary_refs = {}
+
+
+class _Canary:
+    pass
+
+
+def _failing(doc):
+    canary = _Canary()
+    _canary_refs["w"] = weakref.ref(canary)
+    raise ValueError("boom with a local alive")
+
+
+def test_failure_does_not_pin_frames():
+    """TaskResult.exception crosses the executor boundary without its
+    traceback: the failed call's locals must be collectable immediately."""
+    svc = FunctionService()
+    svc.make_endpoint("tb", n_executors=1, workers_per_executor=1)
+    try:
+        fid = svc.register_function(_failing, name="failing")
+        fut = svc.run(fid, {}, max_retries=0)
+        exc = fut.exception(timeout=10)
+        assert isinstance(exc, ValueError)
+        assert exc.__traceback__ is None  # stripped at the boundary
+        gc.collect()
+        assert _canary_refs["w"]() is None  # no frame pins the local
+        with pytest.raises(ValueError, match="boom"):
+            fut.result(0)
+    finally:
+        svc.shutdown()

@@ -12,7 +12,6 @@ from repro.core import (
     FunctionRegistry,
     HeartbeatMonitor,
     MemoCache,
-    Scheduler,
     TaskEnvelope,
     WarmPool,
     hash_function,
@@ -58,6 +57,43 @@ def test_registry_idempotent_and_lookup():
     assert reg.get(fid1).name == "id"
     with pytest.raises(KeyError):
         reg.get("nope")
+
+
+def test_authorized_requires_identity_match():
+    """Regression: anonymous-owned functions used to be world-executable —
+    ``authorized()`` treated owner="anonymous" as a wildcard. Ownership is a
+    strict identity comparison now; ``public=True`` is the only open door."""
+    reg = FunctionRegistry()
+    private = reg.register(lambda d: d, name="private")          # owner=anonymous
+    owned = reg.register(lambda d: d + 0, name="owned", owner="alice")
+    shared = reg.register(lambda d: d + 1, name="shared", owner="alice", public=True)
+
+    # the anonymous-owner default only opens the no-authority deployment
+    assert reg.authorized(private, "anonymous")
+    assert not reg.authorized(private, "mallory")
+    # owners invoke their own functions; everyone else is rejected
+    assert reg.authorized(owned, "alice")
+    assert not reg.authorized(owned, "bob")
+    assert not reg.authorized(owned, "anonymous")
+    # public stays the explicit opt-in for cross-user execution
+    assert reg.authorized(shared, "bob")
+
+
+def test_registry_requirements_normalized():
+    from repro.core import ResourceSpec
+
+    reg = FunctionRegistry()
+    fid = reg.register(lambda d: d, name="caps", requirements=("tpu", "cpu"))
+    spec = reg.get(fid).requirements
+    assert isinstance(spec, ResourceSpec)
+    assert spec.capabilities == frozenset({"tpu", "cpu"})
+    fid2 = reg.register(
+        lambda d: d * 1, name="pref",
+        requirements=ResourceSpec(frozenset({"jit"}), preferred_container="jit"),
+    )
+    assert reg.get(fid2).requirements.preferred_container == "jit"
+    assert reg.get(fid2).requirements.satisfied_by({"cpu", "jit"})
+    assert not reg.get(fid2).requirements.satisfied_by({"cpu"})
 
 
 # ---------------------------------------------------------------- serializer
@@ -166,49 +202,7 @@ def test_warm_pool_lru_bound():
     assert pool.stats()["evictions"] == 2
 
 
-# ---------------------------------------------------------------- scheduler
-class FakeExecutor:
-    def __init__(self, eid, cap, warm=()):
-        self.executor_id = eid
-        self._cap = cap
-        self._warm = set(warm)
-
-    def accepting(self):
-        return True
-
-    def free_capacity(self):
-        return self._cap
-
-    def has_warm(self, key):
-        return key in self._warm
-
-
-def _env():
-    return TaskEnvelope(task_id="t", function_id="f", payload=b"")
-
-
-def test_scheduler_least_loaded():
-    s = Scheduler("least_loaded")
-    exs = [FakeExecutor("a", 1), FakeExecutor("b", 5)]
-    assert s.choose(exs, _env()).executor_id == "b"
-
-
-def test_scheduler_warm_affinity():
-    s = Scheduler("warm_affinity")
-    exs = [FakeExecutor("a", 9), FakeExecutor("b", 1, warm=[("f", "default")])]
-    assert s.choose(exs, _env()).executor_id == "b"
-
-
-def test_scheduler_round_robin_cycles():
-    s = Scheduler("round_robin")
-    exs = [FakeExecutor("a", 1), FakeExecutor("b", 1)]
-    picks = [s.choose(exs, _env()).executor_id for _ in range(4)]
-    assert picks == ["a", "b", "a", "b"]
-
-
-def test_scheduler_none_when_no_capacity():
-    s = Scheduler("random")
-    assert s.choose([FakeExecutor("a", 0)], _env()) is None
+# scheduler policy/filter coverage lives in tests/test_scheduler.py
 
 
 # ---------------------------------------------------------------- batching

@@ -135,5 +135,6 @@ def test_prefetch_capacity_advertised():
     svc = FunctionService()
     ep = svc.make_endpoint("pf", n_executors=1, workers_per_executor=2, prefetch=4)
     ex = list(ep.executors.values())[0]
-    assert ex.free_capacity() == 2 + 4  # idle workers + prefetch allowance
+    # per-container advertisement: idle workers + prefetch allowance
+    assert ex.free_capacity("default") == 2 + 4
     svc.shutdown()

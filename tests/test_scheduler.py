@@ -1,0 +1,132 @@
+"""Dedicated unit tests for core/scheduler.py: the four policies, capacity
+filtering, warm-affinity tie-breaks, and the resource-aware capability filter
+(the paper's §8 future work)."""
+import pytest
+
+from repro.core import Scheduler, TaskEnvelope
+from repro.core.scheduler import POLICIES
+
+
+class FakeExecutor:
+    """Scheduler-facing executor surface: accepting / can_run /
+    free_capacity_for / has_warm / executor_id."""
+
+    def __init__(self, eid, cap, warm=(), capabilities=("cpu",), accepting=True):
+        self.executor_id = eid
+        self._cap = cap
+        self._warm = set(warm)
+        self._capabilities = frozenset(capabilities)
+        self._accepting = accepting
+
+    def accepting(self):
+        return self._accepting
+
+    def can_run(self, env):
+        return set(env.requirements) <= self._capabilities
+
+    def free_capacity_for(self, env):
+        return self._cap if self.can_run(env) else 0
+
+    def has_warm(self, key):
+        return key in self._warm
+
+
+def _env(requirements=(), container="default", function_id="f"):
+    return TaskEnvelope(
+        task_id="t", function_id=function_id, payload=b"",
+        container=container, requirements=tuple(requirements),
+    )
+
+
+# ---------------------------------------------------------------- policies
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        Scheduler("fifo")
+    for p in POLICIES:
+        assert Scheduler(p).policy == p
+
+
+def test_random_uniform_over_capable(seed=7):
+    s = Scheduler("random", seed=seed)
+    exs = [FakeExecutor("a", 1), FakeExecutor("b", 1), FakeExecutor("c", 1)]
+    picks = {s.choose(exs, _env()).executor_id for _ in range(50)}
+    assert picks == {"a", "b", "c"}  # every capable executor is reachable
+
+
+def test_round_robin_cycles():
+    s = Scheduler("round_robin")
+    exs = [FakeExecutor("a", 1), FakeExecutor("b", 1)]
+    picks = [s.choose(exs, _env()).executor_id for _ in range(4)]
+    assert picks == ["a", "b", "a", "b"]
+
+
+def test_least_loaded_picks_most_free():
+    s = Scheduler("least_loaded")
+    exs = [FakeExecutor("a", 1), FakeExecutor("b", 5)]
+    assert s.choose(exs, _env()).executor_id == "b"
+
+
+def test_warm_affinity_prefers_warm_holder():
+    s = Scheduler("warm_affinity")
+    exs = [FakeExecutor("a", 9), FakeExecutor("b", 1, warm=[("f", "default")])]
+    assert s.choose(exs, _env()).executor_id == "b"
+
+
+def test_warm_affinity_tie_break_by_capacity():
+    s = Scheduler("warm_affinity")
+    key = ("f", "default")
+    exs = [
+        FakeExecutor("a", 2, warm=[key]),
+        FakeExecutor("b", 6, warm=[key]),   # warm AND most free: wins
+        FakeExecutor("c", 9),               # more free but cold: loses
+    ]
+    assert s.choose(exs, _env()).executor_id == "b"
+
+
+def test_warm_affinity_spills_to_cold_when_no_warm():
+    s = Scheduler("warm_affinity")
+    exs = [FakeExecutor("a", 2), FakeExecutor("b", 6)]
+    assert s.choose(exs, _env(container="v2")).executor_id == "b"
+
+
+# ---------------------------------------------------------------- filtering
+def test_none_when_no_capacity():
+    s = Scheduler("random")
+    assert s.choose([FakeExecutor("a", 0)], _env()) is None
+
+
+def test_not_accepting_excluded():
+    s = Scheduler("least_loaded")
+    exs = [FakeExecutor("a", 9, accepting=False), FakeExecutor("b", 1)]
+    assert s.choose(exs, _env()).executor_id == "b"
+
+
+def test_capability_filter_excludes_incapable():
+    s = Scheduler("least_loaded")
+    exs = [
+        FakeExecutor("cpu", 9, capabilities=("cpu",)),
+        FakeExecutor("tpu", 1, capabilities=("cpu", "tpu")),
+    ]
+    # the bigger executor can't run a tpu task: the filter removes it
+    assert s.choose(exs, _env(requirements=("tpu",))).executor_id == "tpu"
+    # requirement-free tasks still see every executor
+    assert s.choose(exs, _env()).executor_id == "cpu"
+
+
+def test_none_when_no_capable_executor():
+    s = Scheduler("random")
+    exs = [FakeExecutor("a", 9, capabilities=("cpu",))]
+    assert s.choose(exs, _env(requirements=("gpu",))) is None
+    assert s.capable(exs, _env(requirements=("gpu",))) == []
+
+
+def test_capability_filter_runs_before_every_policy():
+    task = _env(requirements=("tpu",))
+    exs = [
+        FakeExecutor("cpu1", 9),
+        FakeExecutor("tpu1", 1, capabilities=("cpu", "tpu")),
+        FakeExecutor("tpu2", 2, warm=[("f", "default")], capabilities=("cpu", "tpu")),
+    ]
+    for policy in POLICIES:
+        chosen = Scheduler(policy, seed=0).choose(exs, task)
+        assert chosen.executor_id in ("tpu1", "tpu2"), policy

@@ -23,7 +23,7 @@ DOC_FILES = sorted(
 )
 METRIC_PREFIXES = (
     "service.", "forwarder.", "endpoint.", "executor.", "warming.",
-    "autoscaler.", "workflow.", "trigger.",
+    "autoscaler.", "workflow.", "trigger.", "container.",
 )
 
 # [text](target) — excluding images; target split from any #anchor / title
