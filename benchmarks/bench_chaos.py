@@ -1,0 +1,209 @@
+"""Chaos tier: kill executors/endpoints and restart the WHOLE fabric
+mid-workflow, at increasing fault rates, against a journaled fabric.
+
+Each round runs a standalone task stream plus a chain workflow on a
+two-endpoint fabric with a write-ahead journal. While work is in flight a
+chaos loop hard-kills random executors, kills whole endpoints (never the
+last live one), and — once per faulty round — simulates a full fabric crash:
+``journal.close()`` (a crashed process writes nothing further), shutdown,
+rebuild, ``FunctionService.resume``. A round passes only if
+
+- every standalone task reaches a committed terminal record,
+- the workflow run completes with the exact chain output (each node's
+  committed effect applied exactly once), and
+- the journal fold shows ZERO duplicate terminal commitments
+  (``duplicate_completions == 0`` — the journal-verified exactly-once check).
+
+Reported: p99 task latency per fault rate and its inflation over the
+fault-free baseline, plus the fabric's duplicate/resume counters. The p99
+inflation must stay bounded (generously: detection + failover + a full
+restart are all on the measured path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import tempfile
+import time
+
+from repro.core import Forwarder, FunctionService, Workflow, WorkflowNode
+
+from .common import emit, percentile, scaled, sleeper, smoke_mode
+
+TASK_S = 0.02
+ROUND_DEADLINE_S = 60.0
+
+
+def bump(doc):
+    """Chain-node effect: committed exactly once per node, so a K-node chain
+    over document 0 must output exactly K."""
+    return doc + 1
+
+
+def _build(journal_dir, with_journal=True):
+    fwd = Forwarder(
+        policy="least_outstanding",
+        liveness_threshold_s=0.5,
+        watchdog_interval_s=0.02,
+    )
+    svc = FunctionService(
+        forwarder=fwd,
+        journal_dir=journal_dir if with_journal else None,
+    )
+    for i in range(2):
+        svc.make_endpoint(
+            f"chaos{i}", n_executors=2, workers_per_executor=2,
+            heartbeat_interval_s=0.05, heartbeat_threshold=0.5,
+            elastic=True, max_executors=4,
+        )
+    fid_bump = svc.register_function(bump, name="chaos_bump")
+    fid_sleep = svc.register_function(sleeper, name="chaos_sleep")
+    return svc, fid_bump, fid_sleep
+
+
+def _chain(fid, length):
+    nodes = [WorkflowNode("n0", fid, max_retries=5, max_attempts=3)]
+    for i in range(1, length):
+        nodes.append(WorkflowNode(
+            f"n{i}", fid, deps=[f"n{i-1}"], max_retries=5, max_attempts=3,
+        ))
+    return Workflow(nodes, name="chaos-chain")
+
+
+def _round(rate, rng, tmpdir, n_tasks, chain_len):
+    wal = os.path.join(tmpdir, f"wal_{int(rate * 100)}_{rng.randrange(1 << 30)}")
+    svc, fid_bump, fid_sleep = _build(wal)
+    wf = _chain(fid_bump, chain_len)
+
+    t0 = time.monotonic()
+    done_at = {}
+
+    def observe(f):
+        done_at.setdefault(f.task_id, time.monotonic())
+
+    futs = svc.batch_run(
+        fid_sleep, [{"i": i, "t": TASK_S} for i in range(n_tasks)],
+        max_retries=5,
+    )
+    task_ids = [f.task_id for f in futs]
+    for f in futs:
+        f.add_done_callback(observe)
+    run = wf.start(svc, 0)
+
+    restarts = 0
+    restart_pending = bool(rate)  # every faulty round restarts the fabric once
+    deadline = t0 + ROUND_DEADLINE_S
+    while time.monotonic() < deadline:
+        if (not restart_pending and len(done_at) >= len(task_ids)
+                and run.done()):
+            break
+        time.sleep(0.05)
+        if not rate:
+            continue
+        if rng.random() < rate:  # hard-kill a random executor
+            ep = rng.choice(list(svc.endpoints.values()))
+            with ep._exlock:
+                n_ex = len(ep.executors)
+            if n_ex:
+                ep.kill_executor(rng.randrange(n_ex))
+        if rng.random() < rate / 4:  # site outage (never the last live one)
+            live = [
+                ep for ep in svc.endpoints.values() if ep.is_alive(None)
+            ]
+            if len(live) > 1:
+                rng.choice(live).kill()
+        if restart_pending and (
+            len(done_at) >= max(1, len(task_ids) // 4)
+            or rng.random() < rate / 3
+        ):
+            # full fabric crash + restart: the journal stops cold, the whole
+            # process state is discarded, and resume() re-drives only work
+            # without a committed terminal record
+            restart_pending = False
+            restarts += 1
+            svc.journal.close()
+            svc.shutdown()
+            svc, fid_bump, fid_sleep = _build(wal, with_journal=False)
+            report = svc.resume(journal_dir=wal, workflows=[wf])
+            for f in report.futures.values():
+                f.add_done_callback(observe)
+            run = report.runs.get(run.run_id, run)
+
+    missing = [t for t in task_ids if t not in done_at]
+    assert not missing, f"rate {rate}: {len(missing)} tasks never completed"
+    assert run.done() and run.state == "SUCCEEDED", (
+        f"rate {rate}: run {run.run_id} ended {run.state}"
+    )
+    out = run.wait(1)
+    assert out == chain_len, (
+        f"rate {rate}: chain output {out} != {chain_len} "
+        "(a node effect committed zero or multiple times)"
+    )
+    st = svc.journal.state()
+    assert st.duplicate_completions == 0, (
+        f"rate {rate}: {st.duplicate_completions} duplicate terminal records"
+    )
+    for tid in task_ids:
+        assert st.tasks[tid].terminal, f"rate {rate}: {tid} not committed"
+    dup = svc.metrics.counter("journal.duplicate_results").value
+    svc.shutdown()
+    lats = [done_at[t] - t0 for t in task_ids]
+    return lats, restarts, dup
+
+
+def run():
+    rows = []
+    rng = random.Random(1234)
+    n_tasks = scaled(40, 10)
+    chain_len = scaled(6, 4)
+    rounds = scaled(3, 1)
+    rates = (0.0, 0.35) if smoke_mode() else (0.0, 0.15, 0.35)
+
+    base_p99 = None
+    sweep = []
+    with tempfile.TemporaryDirectory(prefix="repro-chaos-") as tmpdir:
+        for rate in rates:
+            lats, restarts, dups = [], 0, 0
+            for _ in range(rounds):
+                round_lats, round_restarts, round_dups = _round(
+                    rate, rng, tmpdir, n_tasks, chain_len
+                )
+                lats.extend(round_lats)
+                restarts += round_restarts
+                dups += round_dups
+            p99 = percentile(lats, 99)
+            if rate == 0.0:
+                base_p99 = p99
+                sweep.append({"rate": rate, "p99_s": p99, "inflation": 1.0,
+                              "restarts": 0, "duplicate_results": dups})
+                rows.append(emit("chaos/p99_base", p99 * 1e6,
+                                 f"{rounds} fault-free rounds"))
+                continue
+            inflation = p99 / base_p99 if base_p99 else float("nan")
+            sweep.append({"rate": rate, "p99_s": p99, "inflation": inflation,
+                          "restarts": restarts, "duplicate_results": dups})
+            rows.append(emit(
+                f"chaos/p99_rate_{int(rate * 100)}", p99 * 1e6,
+                f"inflation {inflation:.1f}x; {restarts} fabric restarts; "
+                f"{dups} duped results",
+            ))
+            # bounded p99 inflation: detection + failover + a full fabric
+            # restart are all on the measured path, so the bound is generous
+            # — the property is "bounded", not "small"
+            assert p99 <= max(50 * base_p99, 5.0), (
+                f"rate {rate}: p99 {p99:.2f}s vs base {base_p99:.2f}s"
+            )
+
+    out = os.path.join(os.path.dirname(__file__), "results", "chaos.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "n_tasks": n_tasks, "chain_len": chain_len,
+                "rounds_per_rate": rounds, "task_s": TASK_S,
+                "sweep": sweep,
+            },
+            f, indent=1,
+        )
+    return rows

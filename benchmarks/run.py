@@ -21,6 +21,7 @@ SUITES = (
     "elasticity",     # §5.4 managed elasticity: blocks-over-time under burst
     "workflow",       # §7 pipelines: diamond DAG vs. linear Flow
     "fault",          # Fig. 7
+    "chaos",          # durability tier: faults + full fabric restart, exactly-once
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)
     "batching",       # Fig. 8

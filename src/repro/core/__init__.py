@@ -2,7 +2,8 @@
 
 Public API:
     FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow,
-    TaskBatch, ResultBatch, BatchCoalescer, MetricsRegistry, Autoscaler
+    TaskBatch, ResultBatch, BatchCoalescer, MetricsRegistry, Autoscaler,
+    Journal, ResultStore, wait, get_result
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -37,6 +38,13 @@ from .autoscaler import (  # noqa: F401
     make_policy,
 )
 from .batching import MicroBatcher, stack_payloads, unstack_results  # noqa: F401
+from .client import (  # noqa: F401
+    ALL_COMPLETED,
+    ALWAYS,
+    ANY_COMPLETED,
+    get_result,
+    wait,
+)
 from .containers import (  # noqa: F401
     CapabilityError,
     ContainerPool,
@@ -56,8 +64,17 @@ from .interchange import (  # noqa: F401
     iter_frames,
     new_batch_id,
 )
+from .journal import (  # noqa: F401
+    Journal,
+    JournalState,
+    ResultStore,
+    ResumeReport,
+    RunJournalEntry,
+    TaskJournalEntry,
+)
 from .memoization import MemoCache  # noqa: F401
 from .metrics import (  # noqa: F401
+    BYTES_BUCKETS,
     LATENCY_BUCKETS_S,
     SIZE_BUCKETS,
     Counter,

@@ -36,8 +36,10 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from . import serializer
 from .auth import Token
 from .futures import TaskFuture
+from .journal import RunJournalEntry
 from .metrics import MetricsRegistry
 from .service import FunctionService, Invocation
 
@@ -122,6 +124,7 @@ class WorkflowRun:
         self._draining = False
         self._done = threading.Event()
         self._metrics = metrics
+        self._journal = None  # bound by Workflow.start/resume when durable
 
     # -- consumer surface --------------------------------------------------
     def done(self) -> bool:
@@ -172,6 +175,10 @@ class WorkflowRun:
             self._events.clear()
         for _, (fut, cb) in inflight:
             fut.remove_done_callback(cb)
+        if self._journal is not None:  # a cancelled run must not resume
+            self._journal.append(
+                "run", "finished", run_id=self.run_id, state=CANCELLED
+            )
         if self._metrics is not None:
             self._metrics.counter("workflow.runs", {"state": "cancelled"}).inc()
         self._done.set()
@@ -228,11 +235,25 @@ class Workflow:
         token: Optional[Token] = None,
     ) -> WorkflowRun:
         run = WorkflowRun(self, document, metrics=service.metrics)
+        run._journal = service.journal
         service.metrics.counter("workflow.runs", {"state": "started"}).inc()
+        if service.journal is not None:
+            try:
+                packed_doc = serializer.packb(document)
+            except Exception:
+                packed_doc = None  # unserializable document: run not resumable
+            service.journal.append(
+                "run", "started", run_id=run.run_id, workflow=self.name,
+                document=packed_doc, nodes=list(self._order),
+            )
         if not self.nodes:
             run.state = SUCCEEDED
             run._done.set()
             service.metrics.counter("workflow.runs", {"state": "succeeded"}).inc()
+            if service.journal is not None:
+                service.journal.append(
+                    "run", "finished", run_id=run.run_id, state=SUCCEEDED
+                )
             return run
         ready = [n for n in self._order if not self.nodes[n].deps]
         # reraise: a submission error in the caller's own start() frame
@@ -252,6 +273,57 @@ class Workflow:
     @staticmethod
     def wait(run: WorkflowRun, timeout: float = 60.0) -> Any:
         return run.wait(timeout)
+
+    # -- durability --------------------------------------------------------
+    def resume(
+        self,
+        service: FunctionService,
+        entry: RunJournalEntry,
+        token: Optional[Token] = None,
+    ) -> WorkflowRun:
+        """Rehydrate a journaled run and re-execute ONLY its unfinished
+        nodes. Committed node results (and skips) are replayed into the run
+        verbatim; everything whose dependencies are thereby satisfied is
+        re-submitted. Usually reached through
+        :meth:`FunctionService.resume`, which matches journal entries to
+        workflow definitions by name."""
+        document = (
+            serializer.unpackb(entry.document)
+            if entry.document is not None else None
+        )
+        run = WorkflowRun(self, document, metrics=service.metrics)
+        run.run_id = entry.run_id  # identity survives the restart
+        run._journal = service.journal
+        service.metrics.counter("workflow.runs", {"state": "resumed"}).inc()
+        with run._lock:
+            for name, packed in entry.node_results.items():
+                if name not in self.nodes:
+                    continue  # journal from an older definition of this DAG
+                if entry.node_skipped.get(name):
+                    run.results[name] = self.nodes[name].fallback
+                    run.node_states[name] = SKIPPED
+                elif packed is not None:
+                    run.results[name] = serializer.unpackb(packed)
+                    run.node_states[name] = SUCCEEDED
+                else:
+                    continue  # completed but result not journaled: re-run
+                run.history.append({
+                    "node": name, "state": run.node_states[name],
+                    "attempt": 0, "replayed": True,
+                })
+                self._advance_children(run, name)
+            ready = [
+                n for n in self._order
+                if run.node_states[n] == PENDING and run._indegree[n] == 0
+            ]
+            finished = run._remaining == 0
+        if service.journal is not None:
+            service.journal.append("run", "resumed", run_id=run.run_id)
+        if finished:
+            self._finish(service, run, SUCCEEDED)
+        else:
+            self._submit(service, run, ready, token)
+        return run
 
     # -- scheduler ---------------------------------------------------------
     def _submit(
@@ -295,6 +367,7 @@ class Workflow:
                     memoize=node.memoize,
                     max_retries=node.max_retries,
                     affinity_hint=None if node.endpoint_id else hint,
+                    owner=run.run_id,  # durability: this run re-drives the node
                 )
             )
             submit_names.append(name)
@@ -392,6 +465,16 @@ class Workflow:
             })
             ready = self._advance_children(run, name)
             finished = run._remaining == 0
+        if service.journal is not None:
+            try:
+                packed = serializer.packb(future.result(0))
+            except Exception:
+                packed = None  # unserializable: the node re-runs on resume
+            if packed is not None:
+                service.journal.append(
+                    "run", "node_completed", run_id=run.run_id,
+                    node=name, result=packed,
+                )
         service.metrics.counter("workflow.nodes_completed").inc()
         if ts.result_ready and ts.client_submit:
             service.metrics.histogram("workflow.node_latency_s").observe(
@@ -440,6 +523,10 @@ class Workflow:
             service.metrics.counter("workflow.node_retries").inc()
             self._submit(service, run, [name], token)
         elif node.on_error == "skip":
+            if service.journal is not None:
+                service.journal.append(
+                    "run", "node_skipped", run_id=run.run_id, node=name
+                )
             if finished:
                 self._finish(service, run, SUCCEEDED)
             elif ready:
@@ -469,6 +556,10 @@ class Workflow:
             run._events.clear()
         for _, (fut, cb) in inflight:  # a failed run detaches its survivors
             fut.remove_done_callback(cb)
+        if service.journal is not None:
+            service.journal.append(
+                "run", "finished", run_id=run.run_id, state=state
+            )
         service.metrics.counter(
             "workflow.runs", {"state": state.lower()}
         ).inc()

@@ -300,12 +300,20 @@ class Endpoint:
                     self._queue.appendleft(retry)
             else:
                 self._speculated.discard(env.speculative_of or env.task_id)
-                fut.set_exception(res.exception or RuntimeError(res.error))
+                if not fut.set_exception(res.exception or RuntimeError(res.error)):
+                    # the future already resolved (speculative copy, replayed
+                    # frame, cancelled client): exactly-once held, count it
+                    self.metrics.counter("journal.duplicate_results").inc()
             return
         # prune straggler bookkeeping once either copy delivers (the set
         # otherwise grows without bound under long-running speculation)
         self._speculated.discard(env.speculative_of or env.task_id)
         won = fut.set_result(res.value)
+        if not won:
+            # a second completion for an already-resolved future (speculation
+            # loser, duplicated/replayed ResultBatch delivery): dedupe to
+            # exactly-once resolution and count the duplicate
+            self.metrics.counter("journal.duplicate_results").inc()
         if won:
             self.completed += 1
             self.metrics.counter("endpoint.tasks_completed").inc()

@@ -26,11 +26,12 @@ from __future__ import annotations
 import random
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .containers import CapabilityError
 from .futures import TaskEnvelope, TaskFuture
 from .interchange import BatchCoalescer, iter_frames
+from .journal import Journal, ResultStore
 from .metrics import SIZE_BUCKETS, MetricsRegistry
 
 ENDPOINT_POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
@@ -133,6 +134,7 @@ class Forwarder:
         max_batch: int = 64,
         max_delay_s: float = 0.0,
         metrics: Optional[MetricsRegistry] = None,
+        journal: Optional[Journal] = None,
     ):
         if policy not in ENDPOINT_POLICIES:
             raise ValueError(
@@ -140,6 +142,12 @@ class Forwarder:
             )
         self.policy = policy
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # Durability tier: an optional write-ahead journal records routing
+        # transitions, and the task-id-keyed ResultStore is the exactly-once
+        # authority — a task's first terminal outcome is recorded here;
+        # replayed/speculated duplicates dedupe (journal.duplicate_results).
+        self.journal = journal
+        self.results = ResultStore(metrics=self.metrics)
         self.ewma_alpha = ewma_alpha
         self.liveness_threshold_s = liveness_threshold_s
         self.watchdog_interval_s = watchdog_interval_s
@@ -197,6 +205,7 @@ class Forwarder:
         registries when a pre-built forwarder is handed to a service."""
         with self._lock:
             self.metrics = metrics
+            self.results.metrics = metrics
             records = list(self._records.values())
         for rec in records:
             rec.rebind_metrics(metrics)
@@ -420,6 +429,15 @@ class Forwarder:
             future.set_exception(exc)
         for env, future in routed_pairs:
             future.add_done_callback(lambda f, tid=env.task_id: self._on_done(tid, f))
+        if self.journal is not None:
+            # WAL ordering: the routing transition is journaled before the
+            # task can reach an endpoint, so a terminal record never precedes
+            # its routed record
+            for env, future in routed_pairs:
+                self.journal.append(
+                    "task", "routed",
+                    task_id=env.task_id, endpoint_id=future.endpoint_id,
+                )
         # deliver via the record captured at routing time: a concurrent
         # deregister() must not strand already-routed tasks undelivered
         for rec, routed in deliveries.values():
@@ -487,7 +505,38 @@ class Forwarder:
             delivered += len(batch)
         return delivered
 
+    def resolve(
+        self,
+        task_id: str,
+        value: Any = None,
+        error: Optional[BaseException] = None,
+    ) -> bool:
+        """Idempotent fabric-level result delivery: complete the future for
+        `task_id` unless a terminal outcome is already recorded. Replayed
+        completions (journal replay, duplicated ResultBatch frames, restarts)
+        dedupe here — counted in ``journal.duplicate_results`` — so a future
+        resolves exactly once no matter how many times its result arrives.
+        Returns True when this call won the resolution."""
+        with self._lock:
+            future = self._futures.get(task_id)
+        if task_id in self.results or (future is not None and future.done()):
+            self.metrics.counter("journal.duplicate_results").inc()
+            return False
+        if future is None:
+            return False  # never routed here (or store already evicted it)
+        if error is not None:
+            return future.set_exception(error)
+        return future.set_result(value)
+
     def _on_done(self, task_id: str, future: TaskFuture) -> None:
+        # the exactly-once authority: the first terminal outcome for this
+        # task id is recorded; any later delivery dedupes against the store
+        exc = future.exception(0)
+        self.results.record(
+            task_id,
+            value=None if exc is not None else future.result(0),
+            error=exc,
+        )
         with self._lock:
             self._futures.pop(task_id, None)
             eid = self._task_endpoint.pop(task_id, None)
@@ -614,6 +663,11 @@ class Forwarder:
                     future.endpoint_id = ep.endpoint_id
                 self.failovers += 1
                 self.metrics.counter("forwarder.failovers").inc()
+                if self.journal is not None:
+                    self.journal.append(
+                        "task", "routed",
+                        task_id=env.task_id, endpoint_id=ep.endpoint_id,
+                    )
                 deliveries.setdefault(ep.endpoint_id, []).append((env, future))
             except RuntimeError as exc:
                 is_alive = getattr(source.endpoint, "is_alive", None)

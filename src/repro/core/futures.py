@@ -12,6 +12,7 @@ import itertools
 import threading
 import time
 import uuid
+from concurrent.futures import CancelledError
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Tuple
 
@@ -25,6 +26,7 @@ class TaskState(enum.Enum):
     FAILED = "failed"
     LOST = "lost"              # executor died while task in flight
     MEMOIZED = "memoized"      # served from the memo cache
+    CANCELLED = "cancelled"    # client cancelled before a result arrived
 
 
 _task_counter = itertools.count()
@@ -144,12 +146,14 @@ class TaskFuture:
             cb(self)
         return True
 
-    def set_exception(self, exc: BaseException) -> bool:
+    def set_exception(
+        self, exc: BaseException, state: TaskState = TaskState.FAILED
+    ) -> bool:
         with self._lock:
             if self._event.is_set():
                 return False
             self._exception = exc
-            self._state = TaskState.FAILED
+            self._state = state
             self.timestamps.result_ready = time.monotonic()
             self._event.set()
             callbacks = list(self._callbacks)
@@ -165,6 +169,28 @@ class TaskFuture:
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def cancel(self) -> bool:
+        """Best-effort cancellation (``concurrent.futures`` shape): resolves
+        this future with :class:`CancelledError` unless it already completed.
+        The fabric cannot interrupt a remotely-executing function — a late
+        result for a cancelled task dedupes against the already-resolved
+        future (and counts in ``journal.duplicate_results``)."""
+        return self.set_exception(
+            CancelledError(self.task_id), state=TaskState.CANCELLED
+        )
+
+    def cancelled(self) -> bool:
+        with self._lock:
+            return self._state is TaskState.CANCELLED
+
+    def running(self) -> bool:
+        """stdlib alignment: dispatched to (or executing on) a worker and not
+        yet complete."""
+        with self._lock:
+            return not self._event.is_set() and self._state in (
+                TaskState.DISPATCHED, TaskState.RUNNING
+            )
 
     def result(self, timeout: Optional[float] = None) -> Any:
         if not self._event.wait(timeout):

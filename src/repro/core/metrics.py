@@ -41,6 +41,12 @@ LATENCY_BUCKETS_S: Tuple[float, ...] = (
 # Default buckets for size-flavoured histograms (batch sizes, counts).
 SIZE_BUCKETS: Tuple[float, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 
+# Default buckets for byte-size histograms (journal record frames, payload
+# sizes): 64 B → 1 MiB, geometric.
+BYTES_BUCKETS: Tuple[float, ...] = (
+    64, 256, 1024, 4096, 16384, 65536, 262144, 1048576,
+)
+
 
 def _labels_key(labels: Optional[Dict[str, str]]) -> str:
     if not labels:

@@ -32,6 +32,7 @@ from .containers import ResourceSpec
 from .endpoint import Endpoint
 from .forwarder import Forwarder
 from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
+from .journal import Journal, ResumeReport
 from .memoization import MemoCache
 from .metrics import MetricsRegistry
 from .registry import FunctionRegistry
@@ -59,6 +60,12 @@ class Invocation:
     memoize: bool = False
     max_retries: int = 2
     affinity_hint: Optional[str] = None
+    # Durability ownership: who re-drives this task after a fabric restart.
+    # None = a standalone client task (``FunctionService.resume`` re-submits
+    # it from the journal); a workflow run_id = the workflow engine owns it
+    # (``Workflow.resume`` re-executes the node, so service-level resume must
+    # not double-submit the same work).
+    owner: Optional[str] = None
 
 
 def _scan_futures(payload: Any, found: Optional[List[TaskFuture]] = None) -> List[TaskFuture]:
@@ -96,6 +103,8 @@ class FunctionService:
         policy: str = "least_outstanding",
         forwarder: Optional[Forwarder] = None,
         metrics: Optional[MetricsRegistry] = None,
+        journal: Optional[Journal] = None,
+        journal_dir: Optional[str] = None,
     ):
         self.registry = FunctionRegistry()
         self.memo = MemoCache(max_entries=memo_entries)
@@ -113,6 +122,14 @@ class FunctionService:
         else:
             self.metrics = metrics if metrics is not None else MetricsRegistry()
             self.forwarder = Forwarder(policy=policy, metrics=self.metrics)
+        # Durability: with a journal attached, every task and workflow-run
+        # lifecycle transition is written ahead, and resume() rehydrates
+        # incomplete work after a restart (see docs/durability.md).
+        if journal is None and journal_dir is not None:
+            journal = Journal(journal_dir, metrics=self.metrics)
+        self.journal = journal
+        if journal is not None and self.forwarder.journal is None:
+            self.forwarder.journal = journal
 
     @property
     def endpoints(self) -> Dict[str, Endpoint]:
@@ -164,7 +181,10 @@ class FunctionService:
         return ep
 
     # -- invocation ---------------------------------------------------------
-    def run_many(
+    # ``_submit`` is THE submission path: run(), batch_run(), run_many(),
+    # map(), and the workflow engine all collapse onto it. The public names
+    # are thin keyword-compatible shims.
+    def _submit(
         self,
         invocations: Sequence[Invocation],
         token: Optional[Token] = None,
@@ -215,6 +235,15 @@ class FunctionService:
             self.forwarder.submit_many(pairs, endpoint_id=endpoint_id)
         return futures
 
+    def run_many(
+        self,
+        invocations: Sequence[Invocation],
+        token: Optional[Token] = None,
+    ) -> List[TaskFuture]:
+        """Heterogeneous batch submission (back-compat name for the unified
+        :meth:`_submit` path)."""
+        return self._submit(invocations, token=token)
+
     def _build_envelope(
         self,
         inv: Invocation,
@@ -258,6 +287,19 @@ class FunctionService:
         env.timestamps.service_in = future.timestamps.service_in
         if digest is not None:
             env.__dict__["_memo_digest"] = digest
+        if self.journal is not None:
+            # write-ahead: the submitted record lands before the task can
+            # reach any endpoint, so a crash after this point is resumable
+            self.journal.append(
+                "task", "submitted",
+                task_id=env.task_id,
+                function_id=env.function_id,
+                payload=env.payload if isinstance(env.payload, bytes) else None,
+                container=env.container,
+                requirements=list(env.requirements),
+                max_retries=env.max_retries,
+                owner=inv.owner,
+            )
         return env
 
     def _submit_deferred(
@@ -310,7 +352,7 @@ class FunctionService:
     ) -> List[TaskFuture]:
         """Homogeneous batch: one function, many payloads, submitted to the
         Forwarder as ONE batch (a single ``run()`` is simply a batch of one)."""
-        return self.run_many(
+        return self._submit(
             [
                 Invocation(
                     function_id=function_id,
@@ -420,6 +462,98 @@ class FunctionService:
         futs = self.batch_run(function_id, payloads, endpoint_id, **kwargs)
         return [f.result(timeout) for f in futs]
 
+    # -- durability ------------------------------------------------------------
+    def resume(
+        self,
+        journal_dir: Optional[str] = None,
+        workflows: Sequence[Any] = (),
+        token: Optional[Token] = None,
+    ) -> ResumeReport:
+        """Rehydrate incomplete work from a journal after a fabric restart.
+
+        Re-executes ONLY work without a committed terminal record: standalone
+        tasks are re-submitted through the Forwarder under their original
+        task ids (so the eventual terminal record matches the journal entry),
+        and incomplete workflow runs are handed to their matching definition
+        in `workflows` (``Workflow.resume`` re-runs only unfinished nodes).
+        Every already-terminal task id is primed into the Forwarder's
+        :class:`~repro.core.journal.ResultStore` first, so a replayed late
+        delivery for committed work dedupes instead of resolving twice.
+        """
+        if journal_dir is not None:
+            journal = Journal(journal_dir, metrics=self.metrics)
+            self.journal = journal
+            self.forwarder.journal = journal
+        if self.journal is None:
+            raise ValueError(
+                "resume() needs a journal: pass journal_dir or construct "
+                "the service with one"
+            )
+        self._identity(token, auth_mod.SCOPE_INVOKE)
+        st = self.journal.state()
+        report = ResumeReport(state=st)
+        for entry in st.tasks.values():
+            if entry.terminal:  # exactly-once: committed results never re-resolve
+                self.forwarder.results.prime(entry.task_id)
+        by_name: Dict[str, Any] = {}
+        for wf in workflows:
+            by_name.setdefault(wf.name, wf)
+        for run_entry in st.incomplete_runs():
+            wf = by_name.get(run_entry.workflow)
+            if wf is None:
+                report.skipped.append(
+                    (run_entry.run_id,
+                     f"no definition for workflow {run_entry.workflow!r}")
+                )
+                continue
+            report.runs[run_entry.run_id] = wf.resume(
+                self, run_entry, token=token
+            )
+            self.metrics.counter("journal.resumed_runs").inc()
+        pairs: List[Tuple[TaskEnvelope, TaskFuture]] = []
+        for entry in st.incomplete_tasks():
+            if entry.owner is not None:
+                continue  # the owning workflow run re-executes this node
+            if not entry.resumable:
+                report.skipped.append((entry.task_id, "payload not journaled"))
+                continue
+            try:
+                self.registry.get(entry.function_id)
+            except KeyError:
+                report.skipped.append(
+                    (entry.task_id,
+                     f"function {entry.function_id!r} not registered")
+                )
+                continue
+            now = time.monotonic()
+            future = TaskFuture(entry.task_id)  # original id: stable identity
+            future.timestamps.client_submit = now
+            future.timestamps.service_in = now
+            future.add_done_callback(self._observe_completion)
+            env = TaskEnvelope(
+                task_id=entry.task_id,
+                function_id=entry.function_id,
+                payload=entry.payload,
+                container=entry.container,
+                requirements=entry.requirements,
+                max_retries=entry.max_retries,
+            )
+            env.timestamps.client_submit = now
+            env.timestamps.service_in = now
+            self.journal.append(  # idempotent under the fold
+                "task", "submitted",
+                task_id=entry.task_id, function_id=entry.function_id,
+                payload=entry.payload, container=entry.container,
+                requirements=list(entry.requirements),
+                max_retries=entry.max_retries, owner=None,
+            )
+            pairs.append((env, future))
+            report.futures[entry.task_id] = future
+            self.metrics.counter("journal.resumed_tasks").inc()
+        if pairs:
+            self.forwarder.submit_many(pairs)
+        return report
+
     # -- status/result (REST-shaped) ------------------------------------------
     @staticmethod
     def status(future: TaskFuture) -> str:
@@ -432,7 +566,24 @@ class FunctionService:
     # -- hooks -----------------------------------------------------------------
     def _observe_completion(self, future: TaskFuture) -> None:
         """Done-callback on every future built by this service: end-to-end
-        success/failure counts and the client-observed latency histogram."""
+        success/failure counts and the client-observed latency histogram.
+        With a journal attached this is also the commitment point — the
+        terminal record lands exactly once per task (the future resolves at
+        most once, so this callback fires at most once)."""
+        if self.journal is not None:
+            exc = future.exception(0)
+            if exc is None:
+                try:
+                    value = serializer.packb(future.result(0))
+                except Exception:
+                    value = None  # unserializable result: committed in-memory only
+                self.journal.append(
+                    "task", "completed", task_id=future.task_id, value=value
+                )
+            else:
+                self.journal.append(
+                    "task", "failed", task_id=future.task_id, error=repr(exc)
+                )
         if future.exception(0) is None:
             self.metrics.counter("service.tasks_completed").inc()
             ts = future.timestamps

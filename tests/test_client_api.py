@@ -1,0 +1,217 @@
+"""Unified client surface: wait / get_result, stdlib-aligned TaskFuture,
+and the collapsed ``_submit`` submission path."""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ALL_COMPLETED,
+    ALWAYS,
+    ANY_COMPLETED,
+    FunctionService,
+    Invocation,
+    TaskFuture,
+    TaskState,
+    get_result,
+    wait,
+)
+
+
+def add_one(x):
+    return x + 1
+
+
+def napper(doc):
+    time.sleep(doc["t"])
+    return doc["i"]
+
+
+def _completed(task_id, value):
+    f = TaskFuture(task_id)
+    f.set_result(value)
+    return f
+
+
+def _later(task_id, value, delay):
+    f = TaskFuture(task_id)
+    threading.Timer(delay, f.set_result, args=(value,)).start()
+    return f
+
+
+# ---------------------------------------------------------------------------
+# wait()
+# ---------------------------------------------------------------------------
+class TestWait:
+    def test_all_completed_partitions_in_input_order(self):
+        fs = [_later("b", 2, 0.05), _completed("a", 1), _later("c", 3, 0.1)]
+        done, not_done = wait(fs)
+        assert [f.task_id for f in done] == ["b", "a", "c"]
+        assert not_done == []
+
+    def test_any_completed_returns_on_first(self):
+        slow = TaskFuture("slow")  # never resolves
+        fast = _later("fast", 1, 0.02)
+        done, not_done = wait([slow, fast], return_when=ANY_COMPLETED,
+                              timeout=5)
+        assert fast in done and slow in not_done
+
+    def test_always_returns_immediately(self):
+        pending = TaskFuture("pending")
+        done, not_done = wait([pending, _completed("d", 0)],
+                              return_when=ALWAYS)
+        assert [f.task_id for f in done] == ["d"]
+        assert [f.task_id for f in not_done] == ["pending"]
+
+    def test_timeout_returns_partial_partition(self):
+        pending = TaskFuture("pending")
+        t0 = time.monotonic()
+        done, not_done = wait([pending, _completed("d", 0)], timeout=0.05)
+        assert time.monotonic() - t0 < 1.0
+        assert [f.task_id for f in done] == ["d"]
+        assert not_done == [pending]
+        # the straggler's callback list must not leak the wait's observer
+        assert pending._callbacks == []
+
+    def test_throw_except_raises_first_failure(self):
+        bad = TaskFuture("bad")
+        bad.set_exception(RuntimeError("boom"))
+        with pytest.raises(RuntimeError, match="boom"):
+            wait([_completed("ok", 1), bad])
+        done, _ = wait([_completed("ok", 1), bad], throw_except=False)
+        assert len(done) == 2
+
+    def test_single_future_accepted(self):
+        done, not_done = wait(_completed("solo", 5))
+        assert len(done) == 1 and not_done == []
+
+    def test_empty_iterable(self):
+        assert wait([]) == ([], [])
+
+    def test_unknown_return_when_rejected(self):
+        with pytest.raises(ValueError, match="return_when"):
+            wait([], return_when="SOME_COMPLETED")
+
+    def test_mixes_stdlib_futures(self):
+        std = cf.Future()
+        std.set_result(11)
+        ours = _completed("m", 22)
+        done, _ = wait([std, ours])
+        assert [12 - 1, 22] == [done[0].result(), done[1].result(0)]
+
+    def test_stdlib_cancelled_future_raises_cancelled(self):
+        std = cf.Future()
+        std.cancel()
+        with pytest.raises(cf.CancelledError):
+            wait([std])
+
+
+# ---------------------------------------------------------------------------
+# get_result()
+# ---------------------------------------------------------------------------
+class TestGetResult:
+    def test_single_future_bare_result(self):
+        assert get_result(_completed("s", 9)) == 9
+
+    def test_ordered_results(self):
+        fs = [_later("x", 10, 0.03), _completed("y", 20)]
+        assert get_result(fs) == [10, 20]
+
+    def test_timeout_raises(self):
+        with pytest.raises(TimeoutError, match="1 of 2"):
+            get_result([TaskFuture("never"), _completed("z", 1)],
+                       timeout=0.05)
+
+    def test_throw_except_false_yields_none_placeholders(self):
+        bad = TaskFuture("bad")
+        bad.set_exception(ValueError("nope"))
+        cancelled = TaskFuture("c")
+        cancelled.cancel()
+        out = get_result([_completed("g", 7), bad, cancelled],
+                         throw_except=False)
+        assert out == [7, None, None]
+
+    def test_throw_except_raises(self):
+        bad = TaskFuture("bad")
+        bad.set_exception(ValueError("nope"))
+        with pytest.raises(ValueError, match="nope"):
+            get_result([bad])
+
+
+# ---------------------------------------------------------------------------
+# TaskFuture: concurrent.futures alignment
+# ---------------------------------------------------------------------------
+class TestFutureAlignment:
+    def test_cancel_resolves_with_cancelled_error(self):
+        f = TaskFuture("t")
+        assert f.cancel() is True
+        assert f.cancelled() and f.done()
+        assert f.state is TaskState.CANCELLED
+        with pytest.raises(cf.CancelledError):
+            f.result(0)
+        assert isinstance(f.exception(0), cf.CancelledError)
+
+    def test_cancel_after_completion_fails(self):
+        f = _completed("t", 1)
+        assert f.cancel() is False
+        assert not f.cancelled()
+        assert f.result(0) == 1
+
+    def test_late_result_after_cancel_dedupes(self):
+        f = TaskFuture("t")
+        f.cancel()
+        assert f.set_result(42) is False  # the remote result arrives late
+        assert f.cancelled()
+
+    def test_running_reflects_dispatch_states(self):
+        f = TaskFuture("t")
+        assert not f.running()
+        f.set_state(TaskState.DISPATCHED)
+        assert f.running()
+        f.set_state(TaskState.RUNNING)
+        assert f.running()
+        f.set_result(1)
+        assert not f.running()
+
+
+# ---------------------------------------------------------------------------
+# The collapsed submission path + end-to-end client surface
+# ---------------------------------------------------------------------------
+class TestUnifiedSubmit:
+    @pytest.fixture()
+    def svc(self):
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=2)
+        yield svc
+        svc.shutdown()
+
+    def test_run_batch_run_run_many_share_submit(self, svc, monkeypatch):
+        fid = svc.register_function(add_one)
+        calls = []
+        orig = FunctionService._submit
+
+        def spy(self, invocations, token=None):
+            calls.append(len(invocations))
+            return orig(self, invocations, token=token)
+
+        monkeypatch.setattr(FunctionService, "_submit", spy)
+        assert svc.run(fid, 1).result(10) == 2
+        assert [f.result(10) for f in svc.batch_run(fid, [1, 2])] == [2, 3]
+        assert svc.run_many([Invocation(fid, 5)])[0].result(10) == 6
+        assert calls == [1, 2, 1]  # every public name funnels through _submit
+
+    def test_wait_and_get_result_over_fabric_futures(self, svc):
+        fid = svc.register_function(napper)
+        futs = svc.batch_run(
+            fid, [{"i": i, "t": 0.01 * (i % 3)} for i in range(6)]
+        )
+        done, not_done = wait(futs, return_when=ANY_COMPLETED, timeout=10)
+        assert done
+        assert get_result(futs, timeout=10) == list(range(6))
+
+    def test_get_result_single_fabric_future(self, svc):
+        fid = svc.register_function(add_one)
+        assert get_result(svc.run(fid, 41), timeout=10) == 42

@@ -1,0 +1,363 @@
+"""Durability tier: write-ahead journal, exactly-once results, resume.
+
+Covers the three headline guarantees:
+- a crash during append leaves a truncated record that replay skips,
+- duplicated result delivery resolves each future exactly once, and
+- resume after a fabric kill re-runs only incomplete work (standalone
+  tasks and DAG nodes alike).
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import pytest
+
+from repro.core import (
+    Forwarder,
+    FunctionService,
+    Journal,
+    ResultStore,
+    TaskFuture,
+    Workflow,
+    WorkflowNode,
+    serializer,
+)
+
+# Module-level functions: their ids are source-content hashes, so a second
+# fabric registering the same source sees the same function_id — the identity
+# contract resume depends on. The executed-node log lets tests assert which
+# work actually re-ran.
+EXECUTED: list = []
+_EXECUTED_LOCK = threading.Lock()
+
+
+def tracked_inc(x):
+    with _EXECUTED_LOCK:
+        EXECUTED.append(x)
+    return x + 1
+
+
+def plain_double(x):
+    return x * 2
+
+
+@pytest.fixture(autouse=True)
+def _clear_executed():
+    with _EXECUTED_LOCK:
+        EXECUTED.clear()
+    yield
+
+
+# ---------------------------------------------------------------------------
+# Journal framing / replay
+# ---------------------------------------------------------------------------
+class TestJournalFraming:
+    def test_append_replay_roundtrip(self, tmp_path):
+        j = Journal(str(tmp_path))
+        j.append("task", "submitted", task_id="t1", function_id="f1")
+        j.append("task", "completed", task_id="t1", value=serializer.packb(7))
+        recs = list(j.records())
+        assert [r["event"] for r in recs] == ["submitted", "completed"]
+        st = j.state()
+        assert st.tasks["t1"].status == "completed"
+        assert st.tasks["t1"].result() == 7
+        j.close()
+
+    def test_crash_during_append_truncated_record_skipped(self, tmp_path):
+        j = Journal(str(tmp_path))
+        j.append("task", "submitted", task_id="t1", function_id="f1")
+        j.append("task", "submitted", task_id="t2", function_id="f1")
+        seg = j.segments()[-1]
+        j.close()
+        # crash mid-append: the tail record loses its last bytes
+        size = os.path.getsize(seg)
+        with open(seg, "ab") as f:
+            f.truncate(size - 3)
+        j2 = Journal(str(tmp_path))
+        recs = list(j2.records())
+        assert [r["task_id"] for r in recs] == ["t1"]  # torn tail skipped
+        assert j2.metrics.counter("journal.truncated_records").value == 1
+        # the torn segment is quarantined: new appends land in a fresh
+        # segment and replay still stops at the tear
+        j2.append("task", "submitted", task_id="t3", function_id="f1")
+        assert [r["task_id"] for r in j2.records()] == ["t1", "t3"]
+        j2.close()
+
+    def test_garbage_tail_terminates_segment(self, tmp_path):
+        j = Journal(str(tmp_path))
+        j.append("run", "started", run_id="r1", workflow="w", nodes=["a"])
+        seg = j.segments()[-1]
+        j.close()
+        with open(seg, "ab") as f:
+            f.write(b"\x00garbage-not-a-frame")
+        j2 = Journal(str(tmp_path))
+        assert [r["event"] for r in j2.records()] == ["started"]
+        j2.close()
+
+    def test_closed_journal_drops_appends(self, tmp_path):
+        j = Journal(str(tmp_path))
+        j.append("task", "submitted", task_id="t1")
+        j.close()
+        assert j.append("task", "completed", task_id="t1") is None
+        j2 = Journal(str(tmp_path))
+        assert not j2.state().tasks["t1"].terminal
+        j2.close()
+
+    def test_compaction_folds_history_and_gcs_segments(self, tmp_path):
+        j = Journal(str(tmp_path))
+        for i in range(20):
+            j.append("task", "submitted", task_id=f"t{i}", function_id="f",
+                     payload=serializer.packb(i))
+            j.append("task", "completed", task_id=f"t{i}",
+                     value=serializer.packb(i))
+        j.append("task", "submitted", task_id="open", function_id="f",
+                 payload=serializer.packb(0))
+        before = j.state()
+        j.compact()
+        assert len(j.segments()) <= 2  # snapshot + fresh active segment
+        after = j.state()
+        assert set(after.tasks) == set(before.tasks)
+        assert after.tasks["t7"].result() == 7
+        assert not after.tasks["open"].terminal
+        assert j.metrics.counter("journal.compactions").value == 1
+        j.close()
+
+    def test_duplicate_terminal_records_counted_once(self, tmp_path):
+        j = Journal(str(tmp_path))
+        j.append("task", "completed", task_id="t1", value=serializer.packb(1))
+        j.append("task", "completed", task_id="t1", value=serializer.packb(2))
+        j.append("task", "failed", task_id="t1", error="late loser")
+        st = j.state()
+        assert st.duplicate_completions == 2
+        assert st.tasks["t1"].result() == 1  # first commitment wins
+        j.close()
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once result delivery
+# ---------------------------------------------------------------------------
+class TestExactlyOnce:
+    def test_result_store_dedupes_and_counts(self):
+        store = ResultStore()
+        assert store.record("t1", value=1) is True
+        assert store.record("t1", value=2) is False
+        assert store.record("t1", error=RuntimeError("x")) is False
+        assert store.metrics.counter("journal.duplicate_results").value == 2
+        store.prime("t2")  # replay seeding never counts as a duplicate
+        assert store.metrics.counter("journal.duplicate_results").value == 2
+        assert store.record("t2", value=9) is False  # but later delivery does
+        assert store.metrics.counter("journal.duplicate_results").value == 3
+
+    def test_result_store_bounded(self):
+        store = ResultStore(max_entries=4)
+        for i in range(10):
+            store.record(f"t{i}", value=i)
+        assert len(store) == 4
+        assert "t9" in store and "t0" not in store
+
+    def test_duplicate_delivery_resolves_future_exactly_once(self):
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(plain_double)
+        fut = svc.run(fid, 4)
+        assert fut.result(10) == 8
+        # a replayed ResultBatch / restarted-endpoint delivery arrives late:
+        fwd = svc.forwarder
+        assert fwd.resolve(fut.task_id, value=999) is False
+        assert fwd.resolve(fut.task_id, error=RuntimeError("late")) is False
+        assert fut.result(0) == 8  # the committed result never changes
+        assert svc.metrics.counter("journal.duplicate_results").value >= 2
+        svc.shutdown()
+
+    def test_resolve_completes_unresolved_future_once(self):
+        fwd = Forwarder()
+        env_fut = TaskFuture("t-manual")
+        fwd._futures["t-manual"] = env_fut
+        assert fwd.resolve("t-manual", value=42) is True
+        assert env_fut.result(0) == 42
+        assert fwd.resolve("t-manual", value=43) is False
+        fwd.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Resume: tasks
+# ---------------------------------------------------------------------------
+class TestTaskResume:
+    def _journal_task(self, j, task_id, payload, owner=None, fid=None):
+        j.append("task", "submitted", task_id=task_id,
+                 function_id=fid, payload=serializer.packb(payload),
+                 container="default", requirements=[], max_retries=2,
+                 owner=owner)
+
+    def test_resume_reruns_only_uncommitted_tasks(self, tmp_path):
+        wal = str(tmp_path / "wal")
+        svc = FunctionService(journal_dir=wal)
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(tracked_inc)
+        done = svc.run(fid, 10)
+        assert done.result(10) == 11
+        # journaled-but-never-executed work, then the fabric dies:
+        self._journal_task(svc.journal, "t-lost", 20, fid=fid)
+        svc.journal.close()
+        svc.shutdown()
+        ran_before = list(EXECUTED)
+
+        svc2 = FunctionService()
+        svc2.make_endpoint("ep2", n_executors=1)
+        assert svc2.register_function(tracked_inc) == fid  # stable identity
+        report = svc2.resume(journal_dir=wal)
+        assert set(report.futures) == {"t-lost"}  # only the uncommitted task
+        assert report.futures["t-lost"].result(10) == 21
+        assert EXECUTED == ran_before + [20]
+        st = svc2.journal.state()
+        assert st.tasks["t-lost"].terminal
+        assert st.tasks[done.task_id].terminal
+        assert st.duplicate_completions == 0
+        svc2.shutdown()
+
+    def test_resume_skips_owned_and_unregistered(self, tmp_path):
+        wal = str(tmp_path / "wal")
+        j = Journal(wal)
+        self._journal_task(j, "t-owned", 1, owner="wfrun-abc", fid="fid-x")
+        self._journal_task(j, "t-unknown", 2, fid="fid-missing")
+        j.close()
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=1)
+        report = svc.resume(journal_dir=wal)
+        assert report.futures == {}  # owned work is the workflow's to re-run
+        assert ("t-unknown", "function 'fid-missing' not registered") in (
+            report.skipped
+        )
+        svc.shutdown()
+
+    def test_resume_requires_a_journal(self):
+        svc = FunctionService()
+        with pytest.raises(ValueError, match="journal"):
+            svc.resume()
+        svc.shutdown()
+
+    def test_terminal_ids_primed_against_replay(self, tmp_path):
+        wal = str(tmp_path / "wal")
+        j = Journal(wal)
+        self._journal_task(j, "t-done", 1, fid="f")
+        j.append("task", "completed", task_id="t-done",
+                 value=serializer.packb(2))
+        j.close()
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=1)
+        svc.resume(journal_dir=wal)
+        # a replayed late delivery for committed work dedupes, not resolves
+        assert svc.forwarder.resolve("t-done", value=999) is False
+        assert svc.metrics.counter("journal.duplicate_results").value == 1
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Resume: workflow runs
+# ---------------------------------------------------------------------------
+def _chain(fid, n=3):
+    nodes = [WorkflowNode("n0", fid)]
+    for i in range(1, n):
+        nodes.append(WorkflowNode(f"n{i}", fid, deps=[f"n{i-1}"]))
+    return Workflow(nodes, name="durable-chain")
+
+
+class TestWorkflowResume:
+    def test_run_lifecycle_journaled(self, tmp_path):
+        svc = FunctionService(journal_dir=str(tmp_path / "wal"))
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(tracked_inc)
+        wf = _chain(fid)
+        run = wf.start(svc, 0)
+        assert run.wait(10) == 3
+        entry = svc.journal.state().runs[run.run_id]
+        assert entry.state == "SUCCEEDED"
+        assert sorted(entry.done_nodes()) == ["n0", "n1", "n2"]
+        svc.shutdown()
+
+    def test_resume_reruns_only_incomplete_nodes(self, tmp_path):
+        wal = str(tmp_path / "wal")
+        j = Journal(wal)
+        # a run killed after n0 committed: n1/n2 never finished
+        j.append("run", "started", run_id="wfrun-res", workflow="durable-chain",
+                 document=serializer.packb(0), nodes=["n0", "n1", "n2"])
+        j.append("run", "node_completed", run_id="wfrun-res", node="n0",
+                 result=serializer.packb(1))
+        j.close()
+
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=1)
+        fid_expected = svc.register_function(tracked_inc)
+        wf = _chain(fid_expected)
+        report = svc.resume(journal_dir=wal, workflows=[wf])
+        run = report.runs["wfrun-res"]
+        assert run.wait(10) == 3
+        # only n1 (input 1) and n2 (input 2) executed — n0 was replayed
+        assert sorted(EXECUTED) == [1, 2]
+        st = svc.journal.state()
+        entry = st.runs["wfrun-res"]
+        assert entry.state == "SUCCEEDED" and entry.resumed == 1
+        assert st.duplicate_completions == 0
+        svc.shutdown()
+
+    def test_resume_without_definition_is_skipped(self, tmp_path):
+        wal = str(tmp_path / "wal")
+        j = Journal(wal)
+        j.append("run", "started", run_id="wfrun-orphan", workflow="nameless",
+                 document=serializer.packb(0), nodes=["n0"])
+        j.close()
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=1)
+        report = svc.resume(journal_dir=wal)
+        assert report.runs == {}
+        assert any(rid == "wfrun-orphan" for rid, _ in report.skipped)
+        svc.shutdown()
+
+    def test_fully_replayed_run_finishes_without_execution(self, tmp_path):
+        wal = str(tmp_path / "wal")
+        j = Journal(wal)
+        j.append("run", "started", run_id="wfrun-done", workflow="durable-chain",
+                 document=serializer.packb(0), nodes=["n0", "n1", "n2"])
+        for i, node in enumerate(("n0", "n1", "n2")):
+            j.append("run", "node_completed", run_id="wfrun-done", node=node,
+                     result=serializer.packb(i + 1))
+        j.close()
+        svc = FunctionService()
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(tracked_inc)
+        report = svc.resume(journal_dir=wal, workflows=[_chain(fid)])
+        run = report.runs["wfrun-done"]
+        assert run.wait(5) == 3
+        assert EXECUTED == []  # nothing re-ran: every node was committed
+        svc.shutdown()
+
+    def test_cancelled_run_commits_terminal_record(self, tmp_path):
+        svc = FunctionService(journal_dir=str(tmp_path / "wal"))
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(plain_double)
+        wf = Workflow([WorkflowNode("only", fid)], name="cancel-me")
+        run = wf.start(svc, 1)
+        run.cancel()
+        entry = svc.journal.state().runs[run.run_id]
+        assert entry.terminal  # a cancelled run must never resume
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Full fabric crash/restart sweep (the chaos tier, in-suite)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_high_fault_rate_chaos_sweep(tmp_path):
+    """The benchmark's property at an aggressive fault rate: every round
+    completes, exactly-once holds (journal-verified), latency stays
+    bounded."""
+    import random
+
+    from benchmarks.bench_chaos import _round
+
+    rng = random.Random(99)
+    for i in range(3):
+        lats, restarts, _dups = _round(0.5, rng, str(tmp_path), 24, 5)
+        assert len(lats) == 24
+        assert restarts == 1

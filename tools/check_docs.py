@@ -23,7 +23,7 @@ DOC_FILES = sorted(
 )
 METRIC_PREFIXES = (
     "service.", "forwarder.", "endpoint.", "executor.", "warming.",
-    "autoscaler.", "workflow.", "trigger.", "container.",
+    "autoscaler.", "workflow.", "trigger.", "container.", "journal.",
 )
 
 # [text](target) — excluding images; target split from any #anchor / title
