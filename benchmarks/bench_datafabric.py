@@ -1,0 +1,231 @@
+"""Data fabric tier: DataRef indirection vs. inline payloads, predictive
+routing, and ETA-overrun speculation.
+
+Three experiments:
+
+1. **throughput** — N tasks sharing one ≳1 MiB dataset, (a) inline through
+   the Forwarder (every envelope carries the full packed array) vs. (b) as a
+   :class:`DataRef` into a filesystem store (envelopes carry ~100 B; each
+   endpoint fetches the blob once into its locality cache). The ref path
+   must sustain ≥2x the inline throughput — the tentpole acceptance bar.
+2. **eta_aware vs random** — a heterogeneous fabric (one wide fast endpoint,
+   one narrow slow one). After a priming wave trains the runtime predictor,
+   ``eta_aware`` must beat ``random`` on p99 task latency.
+3. **speculation** — with a journaled fabric and backup-task speculation
+   enabled against a pathologically slow endpoint: stragglers get backup
+   copies, every task completes, and the journal fold must show ZERO
+   duplicate terminal commitments (``duplicate_completions == 0``).
+
+Results land in ``benchmarks/results/datafabric.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import FileSystemStore, Forwarder, FunctionService
+
+from .common import emit, percentile, scaled, sleeper, smoke_mode
+
+DATASET_BYTES = 1 << 20  # ≥1 MiB payload: the acceptance-criterion regime
+
+
+def reduce_doc(doc):
+    # verifies the payload arrived intact (endpoints, not ends of a memcpy)
+    # while staying O(1): the measured quantity is data movement, not compute
+    x = doc["x"]
+    return {"i": doc["i"], "n": int(x.shape[0]),
+            "s": float(x[0]) + float(x[-1])}
+
+
+def _gather(futs, timeout=120.0):
+    return [f.result(timeout) for f in futs]
+
+
+# ---------------------------------------------------------------------------
+# 1. throughput: inline vs DataRef + filesystem store
+# ---------------------------------------------------------------------------
+def _throughput(tmpdir, n_tasks):
+    dataset = np.arange(DATASET_BYTES // 4, dtype=np.float32)
+    want = float(dataset[0]) + float(dataset[-1])
+    n_want = dataset.shape[0]
+
+    def run_mode(datastore):
+        svc = FunctionService(datastore=datastore, spill_threshold=64 * 1024)
+        svc.make_endpoint("io0", n_executors=2, workers_per_executor=2)
+        fid = svc.register_function(reduce_doc, name="fabric_reduce")
+        if datastore is not None:
+            shared = svc.put_data(dataset)
+            payloads = [{"x": shared, "i": i} for i in range(n_tasks)]
+        else:
+            payloads = [{"x": dataset, "i": i} for i in range(n_tasks)]
+        t0 = time.monotonic()
+        outs = _gather(svc.batch_run(fid, payloads))
+        dt = time.monotonic() - t0
+        assert all(o["s"] == want and o["n"] == n_want for o in outs)
+        svc.shutdown()
+        return n_tasks / dt
+
+    # best-of-N per mode: the harness runs suites back to back in one
+    # process, and a single measured window is at the mercy of whatever the
+    # previous suite's teardown left draining — the ratio is about the data
+    # path, not about transient scheduler noise
+    trials = 3
+    store = FileSystemStore(os.path.join(tmpdir, "blobs"))
+    inline_tput = max(run_mode(None) for _ in range(trials))
+    ref_tput = max(run_mode(store) for _ in range(trials))
+    speedup = ref_tput / inline_tput
+    assert speedup >= 2.0, (
+        f"DataRef path must be >=2x inline for {DATASET_BYTES} B payloads: "
+        f"{ref_tput:.1f}/s vs {inline_tput:.1f}/s ({speedup:.2f}x)"
+    )
+    return {
+        "n_tasks": n_tasks,
+        "payload_bytes": DATASET_BYTES,
+        "inline_tasks_per_s": inline_tput,
+        "dataref_tasks_per_s": ref_tput,
+        "speedup": speedup,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. eta_aware vs random on a heterogeneous fabric
+# ---------------------------------------------------------------------------
+TASK_S = 0.02
+
+
+def _hetero_fabric(policy, seed=7):
+    fwd = Forwarder(policy=policy, seed=seed, watchdog_interval_s=0.02)
+    svc = FunctionService(forwarder=fwd)
+    svc.make_endpoint("wide", n_executors=1, workers_per_executor=8)
+    svc.make_endpoint(
+        "narrow", n_executors=1, workers_per_executor=1,
+        dispatch_interval_s=0.02,
+    )
+    fid = svc.register_function(sleeper, name="fabric_sleeper")
+    return svc, fid
+
+
+def _policy_p99(policy, n_tasks):
+    svc, fid = _hetero_fabric(policy)
+    # priming wave: trains the runtime predictor (and latency EWMAs) so the
+    # measured wave reflects steady-state routing, not exploration
+    _gather(svc.batch_run(fid, [{"i": i, "t": TASK_S} for i in range(16)]))
+    t0 = time.monotonic()
+    done_at = {}
+    futs = svc.batch_run(fid, [{"i": i, "t": TASK_S} for i in range(n_tasks)])
+    for f in futs:
+        f.add_done_callback(
+            lambda fut: done_at.setdefault(fut.task_id, time.monotonic())
+        )
+    _gather(futs)
+    lats = [done_at[f.task_id] - t0 for f in futs]
+    svc.shutdown()
+    return percentile(lats, 99)
+
+
+def _eta_vs_random(n_tasks):
+    random_p99 = _policy_p99("random", n_tasks)
+    eta_p99 = _policy_p99("eta_aware", n_tasks)
+    assert eta_p99 < random_p99, (
+        f"eta_aware p99 {eta_p99 * 1e3:.1f}ms must beat "
+        f"random p99 {random_p99 * 1e3:.1f}ms"
+    )
+    return {
+        "n_tasks": n_tasks,
+        "task_s": TASK_S,
+        "random_p99_s": random_p99,
+        "eta_aware_p99_s": eta_p99,
+        "improvement": random_p99 / eta_p99,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. speculation: backups fire, exactly-once holds
+# ---------------------------------------------------------------------------
+def _speculation(tmpdir, n_tasks):
+    fwd = Forwarder(
+        policy="eta_aware",
+        speculation=True,
+        speculation_eta_factor=1.5,
+        speculation_min_age_s=0.03,
+        watchdog_interval_s=0.01,
+    )
+    svc = FunctionService(forwarder=fwd, journal_dir=os.path.join(tmpdir, "wal"))
+    svc.make_endpoint("healthy", n_executors=1, workers_per_executor=4)
+    # the straggler factory: one worker behind a long dispatch RTT — anything
+    # routed here during exploration overruns its ETA bound
+    svc.make_endpoint(
+        "laggard", n_executors=1, workers_per_executor=1,
+        dispatch_interval_s=0.15,
+    )
+    fid = svc.register_function(sleeper, name="fabric_spec_sleeper")
+    futs = svc.batch_run(fid, [{"i": i, "t": TASK_S} for i in range(n_tasks)])
+    outs = _gather(futs)
+    assert sorted(o["i"] for o in outs) == list(range(n_tasks))
+    time.sleep(0.25)  # let speculation losers drain into the dedupe path
+    st = svc.journal.state()
+    assert st.duplicate_completions == 0, (
+        f"speculation produced {st.duplicate_completions} duplicate commitments"
+    )
+    backups = fwd.backups_launched
+    dup_results = svc.metrics.counter("journal.duplicate_results").value
+    svc.shutdown()
+    return {
+        "n_tasks": n_tasks,
+        "backups_launched": backups,
+        "duplicate_results": dup_results,
+        "duplicate_completions": st.duplicate_completions,
+    }
+
+
+def run():
+    rows = []
+    n_io = scaled(40, 10)
+    n_route = scaled(60, 24)
+    n_spec = scaled(30, 12)
+    with tempfile.TemporaryDirectory(prefix="repro-datafabric-") as tmpdir:
+        tput = _throughput(tmpdir, n_io)
+        rows.append(emit(
+            "datafabric/inline_task", 1e6 / tput["inline_tasks_per_s"],
+            f"{DATASET_BYTES} B inline through the Forwarder",
+        ))
+        rows.append(emit(
+            "datafabric/dataref_task", 1e6 / tput["dataref_tasks_per_s"],
+            f"speedup {tput['speedup']:.1f}x via fs store + locality cache",
+        ))
+
+        route = _eta_vs_random(n_route)
+        rows.append(emit(
+            "datafabric/random_p99", route["random_p99_s"] * 1e6,
+            "heterogeneous fabric, random routing",
+        ))
+        rows.append(emit(
+            "datafabric/eta_aware_p99", route["eta_aware_p99_s"] * 1e6,
+            f"{route['improvement']:.1f}x better p99 than random",
+        ))
+
+        spec = _speculation(tmpdir, n_spec)
+        rows.append(emit(
+            "datafabric/speculation_backups", float(spec["backups_launched"]),
+            f"{spec['duplicate_results']} deduped losers, "
+            f"{spec['duplicate_completions']} duplicate commitments",
+        ))
+
+    out = os.path.join(os.path.dirname(__file__), "results", "datafabric.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(
+            {
+                "smoke": smoke_mode(),
+                "throughput": tput,
+                "routing": route,
+                "speculation": spec,
+            },
+            f, indent=1,
+        )
+    return rows

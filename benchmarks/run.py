@@ -22,6 +22,7 @@ SUITES = (
     "workflow",       # §7 pipelines: diamond DAG vs. linear Flow
     "fault",          # Fig. 7
     "chaos",          # durability tier: faults + full fabric restart, exactly-once
+    "datafabric",     # data tier: DataRef vs inline, eta_aware routing, speculation
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)
     "batching",       # Fig. 8

@@ -3,7 +3,8 @@
 Public API:
     FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow,
     TaskBatch, ResultBatch, BatchCoalescer, MetricsRegistry, Autoscaler,
-    Journal, ResultStore, wait, get_result
+    Journal, ResultStore, wait, get_result, DataRef, FileSystemStore,
+    InMemoryStore, TaskPredictor
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -52,6 +53,21 @@ from .containers import (  # noqa: F401
     ResourceSpec,
     default_container_spec,
 )
+from .datastore import (  # noqa: F401
+    DEFAULT_SPILL_THRESHOLD,
+    DataRef,
+    FileSystemStore,
+    InMemoryStore,
+    ObjectStore,
+    get_store,
+    prefetch_refs,
+    register_store,
+    reset_store_registry,
+    resolve_packed,
+    resolve_payload,
+    scan_refs,
+    spill_payload,
+)
 from .endpoint import Endpoint  # noqa: F401
 from .executor import Executor  # noqa: F401
 from .forwarder import ENDPOINT_POLICIES, EndpointRecord, Forwarder  # noqa: F401
@@ -82,6 +98,11 @@ from .metrics import (  # noqa: F401
     Histogram,
     MetricsRegistry,
     merged_snapshot,
+)
+from .predictor import (  # noqa: F401
+    RuntimePredictor,
+    TaskPredictor,
+    TransferPredictor,
 )
 from .provider import (  # noqa: F401
     LocalThreadProvider,

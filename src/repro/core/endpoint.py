@@ -15,10 +15,12 @@ import threading
 import time
 import uuid
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from .autoscaler import Autoscaler, ScalingObservation, ScalingPolicy
 from .containers import CapabilityError, ContainerSpec, default_container_spec
+from . import serializer
+from .datastore import InMemoryStore, ObjectStore, prefetch_refs, scan_refs
 from .executor import Executor
 from .futures import TaskEnvelope, TaskFuture, TaskState
 from .heartbeat import HeartbeatMonitor, LatencyTracker
@@ -59,6 +61,7 @@ class Endpoint:
         scale_step_fraction: float = 0.5,
         target_tasks_per_worker: float = 2.0,
         latency_slo_s: float = 1.0,
+        data_cache: Optional[ObjectStore] = None,
     ):
         self.endpoint_id = f"ep-{uuid.uuid4().hex[:8]}"
         self.name = name
@@ -91,6 +94,22 @@ class Endpoint:
         self.memo_probe = memo_probe
         self.tracker = LatencyTracker()
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # Data fabric locality cache: DataRef payload leaves materialize here
+        # at dispatch time, so a dataset shared by N tasks crosses the
+        # store->endpoint boundary once. Unregistered (refs never point AT a
+        # cache) and endpoint-private.
+        self.data_cache: ObjectStore = (
+            data_cache
+            if data_cache is not None
+            else InMemoryStore(
+                store_id=f"cache://{self.endpoint_id}", register=False
+            )
+        )
+        # Decoded-value companion to the blob cache: the msgpack decode of a
+        # shared blob runs once per endpoint, workers hand out fresh copies
+        # (see resolve_payload(decoded=...)). Plain dict — worker threads may
+        # race to populate a key, which is harmless.
+        self.data_decoded: Dict[str, Any] = {}
 
         self.result_queue: "queue.Queue[TaskResult]" = queue.Queue()
         self._queue: deque[TaskEnvelope] = deque()
@@ -220,6 +239,12 @@ class Endpoint:
         """Endpoint-tier warm probe: any accepting executor holds a warm
         executable for (function_id, container)."""
         return any(ex.has_warm(key) for ex in self._executor_list() if ex.accepting())
+
+    def has_data(self, key: str) -> bool:
+        """Data-locality probe: is this blob already resident in the
+        endpoint's cache? The Forwarder's ``eta_aware`` policy charges a
+        transfer cost only for ref bytes that are NOT local."""
+        return key in self.data_cache
 
     def is_alive(self, max_heartbeat_age_s: Optional[float] = None) -> bool:
         if not self._alive:
@@ -381,6 +406,32 @@ class Endpoint:
                         if fut is not None and fut.set_result(value, TaskState.MEMOIZED):
                             self.completed += 1
                         continue
+                # data fabric: pull every blob the payload references into
+                # the site-local cache (one store read per NEW key — raw
+                # bytes only, nothing is unpacked or repacked on this serial
+                # loop). Workers then materialize values in parallel from
+                # the warmed cache via the env.data_cache handle.
+                if env.data_refs and isinstance(env.payload, (bytes, bytearray)):
+                    try:
+                        payload = serializer.unpackb(env.payload)
+                        prefetch_refs(
+                            scan_refs(payload), self.data_cache,
+                            metrics=self.metrics,
+                        )
+                        env.payload = payload
+                        env.data_cache = self.data_cache
+                        env.data_decoded = self.data_decoded
+                    except Exception as exc:
+                        with self._flock:
+                            fut = self.futures.get(env.task_id)
+                        if fut is not None:
+                            fut.set_exception(
+                                KeyError(
+                                    f"task {env.task_id}: payload data "
+                                    f"unresolvable at {self.name!r}: {exc}"
+                                )
+                            )
+                        continue
                 env.timestamps.dispatched = now
                 if env.timestamps.endpoint_in:
                     dispatch_latency.observe(now - env.timestamps.endpoint_in)
@@ -523,6 +574,9 @@ class Endpoint:
                     max_retries=0,
                     speculative_of=env.task_id,
                     timestamps=env.timestamps,
+                    data_refs=env.data_refs,
+                    spill_store=env.spill_store,
+                    spill_threshold=env.spill_threshold,
                 )
                 with self._flock:
                     fut = self.futures.get(env.task_id)

@@ -13,6 +13,18 @@ policies in :mod:`repro.core.scheduler` one tier up:
   endpoints are explored first.
 - ``warm_affinity``: prefer endpoints holding a warm executable for the
   task's (function, container), tie-broken by least outstanding.
+- ``eta_aware``: lowest predicted completion time — per-(function, endpoint)
+  rolling-average runtime + transfer cost for payload/DataRef bytes not
+  already resident at the endpoint + queue delay + the endpoint's observed
+  ETA-error correction (see :mod:`repro.core.predictor`). Unmeasured
+  (function, endpoint) pairs are explored first.
+
+With ``speculation=True`` the watchdog also launches one backup copy of any
+task that overruns its ETA error bound (``predicted_eta × factor +
+queue_error``) onto a different endpoint. First result wins the shared
+future; the loser dedupes in the exactly-once ResultStore
+(``journal.duplicate_results``) and the journal's commitment point still
+fires once (``journal.duplicate_completions == 0``).
 
 The Forwarder also runs a liveness watchdog over endpoint heartbeats: when an
 endpoint dies mid-task (``Endpoint.kill()`` or a hung manager loop), every
@@ -33,8 +45,11 @@ from .futures import TaskEnvelope, TaskFuture
 from .interchange import BatchCoalescer, iter_frames
 from .journal import Journal, ResultStore
 from .metrics import SIZE_BUCKETS, MetricsRegistry
+from .predictor import TaskPredictor
 
-ENDPOINT_POLICIES = ("random", "least_outstanding", "latency_aware", "warm_affinity")
+ENDPOINT_POLICIES = (
+    "random", "least_outstanding", "latency_aware", "warm_affinity", "eta_aware",
+)
 
 _Pair = Tuple[TaskEnvelope, TaskFuture]
 
@@ -135,6 +150,10 @@ class Forwarder:
         max_delay_s: float = 0.0,
         metrics: Optional[MetricsRegistry] = None,
         journal: Optional[Journal] = None,
+        predictor: Optional[TaskPredictor] = None,
+        speculation: bool = False,
+        speculation_eta_factor: float = 3.0,
+        speculation_min_age_s: float = 0.05,
     ):
         if policy not in ENDPOINT_POLICIES:
             raise ValueError(
@@ -142,6 +161,18 @@ class Forwarder:
             )
         self.policy = policy
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # Predictive tier (core/predictor.py): runtime/transfer/queue-error
+        # models behind eta_aware routing and ETA-overrun backup speculation.
+        # Auto-created when either consumer is enabled.
+        if predictor is None and (policy == "eta_aware" or speculation):
+            predictor = TaskPredictor(metrics=self.metrics)
+        self.predictor = predictor
+        if predictor is not None:
+            predictor.bind_metrics(self.metrics)
+        self.speculation = speculation
+        self.speculation_eta_factor = speculation_eta_factor
+        self.speculation_min_age_s = speculation_min_age_s
+        self.backups_launched = 0
         # Durability tier: an optional write-ahead journal records routing
         # transitions, and the task-id-keyed ResultStore is the exactly-once
         # authority — a task's first terminal outcome is recorded here;
@@ -167,6 +198,10 @@ class Forwarder:
         self._records: Dict[str, EndpointRecord] = {}
         self._futures: Dict[str, TaskFuture] = {}
         self._task_endpoint: Dict[str, str] = {}  # task_id -> endpoint_id (O(1) _on_done)
+        # speculation bookkeeping: task_id -> (routed_at, predicted_eta_s),
+        # and the set of task ids that already have a backup copy in flight
+        self._eta: Dict[str, Tuple[float, float]] = {}
+        self._backed: set = set()
         self._lock = threading.RLock()
         self._alive = True
         self._watchdog = threading.Thread(
@@ -206,6 +241,8 @@ class Forwarder:
         with self._lock:
             self.metrics = metrics
             self.results.metrics = metrics
+            if self.predictor is not None:
+                self.predictor.bind_metrics(metrics)
             records = list(self._records.values())
         for rec in records:
             rec.rebind_metrics(metrics)
@@ -325,7 +362,62 @@ class Forwarder:
             # saturated-warm spills to cold endpoints (which then warm up)
             pool = warm or live
             return min(pool, key=lambda r: (len(r.outstanding), r.routed))
+        if self.policy == "eta_aware":
+            return self._choose_eta(live, env)
         raise AssertionError(self.policy)  # pragma: no cover
+
+    def _transfer_bytes(self, rec: EndpointRecord, env: TaskEnvelope) -> int:
+        """Bytes that must move to run `env` at this endpoint: the inline
+        payload plus every DataRef blob not already in its locality cache."""
+        inline = len(env.payload) if isinstance(env.payload, (bytes, bytearray)) else 0
+        if not env.data_refs:
+            return inline
+        has_data = getattr(rec.endpoint, "has_data", None)
+        miss = sum(
+            size for key, size in env.data_refs
+            if has_data is None or not has_data(key)
+        )
+        return inline + miss
+
+    def _choose_eta(
+        self, live: List[EndpointRecord], env: TaskEnvelope
+    ) -> EndpointRecord:
+        """Lowest predicted completion time (runtime + transfer + queue delay
+        + ETA-error correction). Unmeasured (function, endpoint) pairs are
+        explored first — normalized least-outstanding among them — so the
+        runtime model covers every endpoint before exploitation begins. The
+        chosen ETA is remembered for speculation's overrun check."""
+        pred = self.predictor
+        now = time.monotonic()
+
+        def load(r: EndpointRecord) -> float:
+            return len(r.outstanding) / max(1, r.endpoint.capacity())
+
+        unmeasured = [
+            r for r in live
+            if not pred.runtime.has_history(env.function_id, r.endpoint.endpoint_id)
+        ]
+        if unmeasured:
+            rec = min(unmeasured, key=lambda r: (load(r), r.routed))
+            eta = pred.eta(
+                env.function_id, rec.endpoint.endpoint_id,
+                self._transfer_bytes(rec, env),
+                len(rec.outstanding), max(1, rec.endpoint.capacity()),
+            )
+            self._eta[env.task_id] = (now, eta)
+            return rec
+        best = best_eta = best_key = None
+        for r in live:
+            eta = pred.eta(
+                env.function_id, r.endpoint.endpoint_id,
+                self._transfer_bytes(r, env),
+                len(r.outstanding), max(1, r.endpoint.capacity()),
+            )
+            key = (eta, load(r), r.routed)
+            if best_key is None or key < best_key:
+                best, best_eta, best_key = r, eta, key
+        self._eta[env.task_id] = (now, best_eta)
+        return best
 
     def submit(
         self,
@@ -528,35 +620,145 @@ class Forwarder:
             return future.set_exception(error)
         return future.set_result(value)
 
-    def _on_done(self, task_id: str, future: TaskFuture) -> None:
+    def _on_done(
+        self, task_id: str, future: TaskFuture, canonical: Optional[str] = None
+    ) -> None:
         # the exactly-once authority: the first terminal outcome for this
-        # task id is recorded; any later delivery dedupes against the store
+        # task id is recorded; any later delivery dedupes against the store.
+        # A backup copy records under its primary's id (`canonical`), so the
+        # speculation loser counts as a duplicate instead of a second task.
         exc = future.exception(0)
         self.results.record(
-            task_id,
+            canonical or task_id,
             value=None if exc is not None else future.result(0),
             error=exc,
         )
+        env: Optional[TaskEnvelope] = None
         with self._lock:
             self._futures.pop(task_id, None)
+            was_backed = (canonical or task_id) in self._backed
+            self._backed.discard(canonical or task_id)
+            eta_info = self._eta.pop(task_id, None)
             eid = self._task_endpoint.pop(task_id, None)
             rec = self._records.get(eid) if eid is not None else None
-            if rec is None or task_id not in rec.outstanding:
-                return
-            rec.outstanding.pop(task_id)
+            if rec is not None and task_id in rec.outstanding:
+                env = rec.outstanding.pop(task_id)
+                rec.sync_outstanding()
+                if exc is None:
+                    rec.completed += 1
+                    ts = future.timestamps
+                    if ts.result_ready and ts.endpoint_in:
+                        lat = max(0.0, ts.result_ready - ts.endpoint_in)
+                        if rec.latency_ewma is None:
+                            rec.latency_ewma = lat
+                        else:
+                            rec.latency_ewma = (
+                                self.ewma_alpha * lat
+                                + (1 - self.ewma_alpha) * rec.latency_ewma
+                            )
+        if self.predictor is None or eid is None or env is None:
+            return
+        ts = future.timestamps
+        # train the runtime model only on clean, unspeculated primaries: a
+        # backed task's shared timestamp trail mixes two copies' clocks
+        if (
+            canonical is None and not was_backed and exc is None
+            and ts.exec_end and ts.exec_start
+        ):
+            self.predictor.record(
+                env.function_id, eid, max(0.0, ts.exec_end - ts.exec_start)
+            )
+        if canonical is None and eta_info is not None and ts.result_ready:
+            routed_at, predicted = eta_info
+            self.predictor.observe_eta(
+                eid, predicted, max(0.0, ts.result_ready - routed_at)
+            )
+
+    # -- ETA-overrun backup speculation ---------------------------------------
+    def check_speculation(self) -> int:
+        """Launch one backup copy for every unbacked in-flight task older than
+        its ETA error bound (``predicted × factor + endpoint queue error``).
+        Runs at watchdog cadence when ``speculation=True``; returns how many
+        backups launched this call."""
+        if self.predictor is None:
+            return 0
+        now = time.monotonic()
+        overdue: List[Tuple[TaskEnvelope, EndpointRecord]] = []
+        with self._lock:
+            for rec in self._records.values():
+                if rec.dead:
+                    continue
+                for tid, env in rec.outstanding.items():
+                    if env.speculative_of or tid in self._backed:
+                        continue
+                    info = self._eta.get(tid)
+                    if info is None:
+                        continue  # pinned past the policy: no prediction made
+                    routed_at, predicted = info
+                    bound = self.predictor.overrun_bound(
+                        rec.endpoint.endpoint_id, predicted,
+                        self.speculation_eta_factor, self.speculation_min_age_s,
+                    )
+                    if now - routed_at > bound:
+                        overdue.append((env, rec))
+        launched = 0
+        for env, rec in overdue:
+            if self._launch_backup(env, rec):
+                launched += 1
+        return launched
+
+    def _launch_backup(self, env: TaskEnvelope, source: EndpointRecord) -> bool:
+        """Route a speculative duplicate of `env` to a live endpoint other
+        than `source`, mapped onto the SAME future. First result wins; the
+        loser dedupes (``journal.duplicate_results``). Backups are never
+        journaled — the primary's records own the durable identity, so the
+        commitment point cannot double-fire."""
+        with self._lock:
+            future = self._futures.get(env.task_id)
+            if future is None or future.done() or env.task_id in self._backed:
+                return False
+            live = [
+                r for r in self._live_records()
+                if r is not source
+                and _endpoint_satisfies(r.endpoint, env.requirements)
+            ]
+            if not live:
+                return False
+            self._backed.add(env.task_id)
+            dup = TaskEnvelope(
+                task_id=f"{env.task_id}#eta",
+                function_id=env.function_id,
+                payload=env.payload,
+                container=env.container,
+                requirements=env.requirements,
+                memoize=env.memoize,
+                max_retries=0,
+                speculative_of=env.task_id,
+                timestamps=env.timestamps,
+                data_refs=env.data_refs,
+                spill_store=env.spill_store,
+                spill_threshold=env.spill_threshold,
+            )
+            rec = min(
+                live,
+                key=lambda r: (
+                    len(r.outstanding) / max(1, r.endpoint.capacity()), r.routed
+                ),
+            )
+            rec.outstanding[dup.task_id] = dup
+            rec.routed += 1
             rec.sync_outstanding()
-            if future.exception(0) is None:
-                rec.completed += 1
-                ts = future.timestamps
-                if ts.result_ready and ts.endpoint_in:
-                    lat = max(0.0, ts.result_ready - ts.endpoint_in)
-                    if rec.latency_ewma is None:
-                        rec.latency_ewma = lat
-                    else:
-                        rec.latency_ewma = (
-                            self.ewma_alpha * lat
-                            + (1 - self.ewma_alpha) * rec.latency_ewma
-                        )
+            self._futures[dup.task_id] = future
+            self._task_endpoint[dup.task_id] = rec.endpoint.endpoint_id
+            self.backups_launched += 1
+        self.metrics.counter("predictor.backups_launched").inc()
+        future.add_done_callback(
+            lambda f, tid=dup.task_id, canon=env.task_id: self._on_done(
+                tid, f, canonical=canon
+            )
+        )
+        self._deliver(rec.endpoint, [(dup, future)])
+        return True
 
     # -- capacity-proportional sharding ---------------------------------------
     def shard(self, n: int, requirements=()) -> List[Tuple[str, int]]:
@@ -596,6 +798,8 @@ class Forwarder:
             time.sleep(self.watchdog_interval_s)
             try:
                 self.check_endpoints()
+                if self.speculation:
+                    self.check_speculation()
             except Exception:  # pragma: no cover - watchdog must never die
                 pass
 
@@ -714,6 +918,11 @@ class Forwarder:
                 "policy": self.policy,
                 "failovers": self.failovers,
                 "orphaned": self.orphaned,
+                "speculation": self.speculation,
+                "backups_launched": self.backups_launched,
+                "predictor": (
+                    self.predictor.stats() if self.predictor is not None else None
+                ),
                 "max_batch": self.max_batch,
                 "max_delay_s": self.max_delay_s,
                 "batches_delivered": self.batches_delivered,

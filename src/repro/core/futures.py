@@ -91,6 +91,20 @@ class TaskEnvelope:
     # prefer the endpoint holding the parent's warm function). The Forwarder
     # honors it only while the hinted endpoint is live and has spare capacity.
     affinity_hint: Optional[str] = None
+    # Data fabric (see core/datastore.py): (key, size) of every DataRef the
+    # payload carries — the Forwarder's transfer estimator reads sizes without
+    # unpacking, and endpoints resolve refs at dispatch when this is
+    # non-empty. `spill_store`/`spill_threshold` tell the worker where to
+    # spill an oversized *result* so it returns as a ref, not inline bytes.
+    data_refs: Tuple[Tuple[str, int], ...] = ()
+    spill_store: Optional[str] = None
+    spill_threshold: Optional[int] = None
+    # Runtime-only handles to the dispatching endpoint's locality caches
+    # (raw blobs + decoded values); attached at dispatch and deliberately
+    # NOT cloned for retries (a retry may land on a different endpoint,
+    # whose own dispatch re-warms them).
+    data_cache: Any = None
+    data_decoded: Any = None
 
     def clone_for_retry(self) -> "TaskEnvelope":
         env = TaskEnvelope(
@@ -104,6 +118,9 @@ class TaskEnvelope:
             retries=self.retries + 1,
             timestamps=self.timestamps,
             affinity_hint=self.affinity_hint,
+            data_refs=self.data_refs,
+            spill_store=self.spill_store,
+            spill_threshold=self.spill_threshold,
         )
         return env
 

@@ -17,9 +17,30 @@ _EXT_NDARRAY = 1
 _EXT_TUPLE = 2
 _EXT_SET = 3
 _EXT_COMPLEX = 4
+_EXT_DATAREF = 5
+
+# Lazily bound: datastore imports this module at load time, so the reverse
+# edge resolves on first use instead of at import.
+_DataRef = None
+
+
+def _dataref_type():
+    global _DataRef
+    if _DataRef is None:
+        from .datastore import DataRef
+
+        _DataRef = DataRef
+    return _DataRef
 
 
 def _default(obj: Any):
+    DataRef = _dataref_type()
+    if isinstance(obj, DataRef):
+        # refs travel the wire as (key, size, locations); payload_hash uses a
+        # location-free view so moving data never changes a memo key
+        return msgpack.ExtType(
+            _EXT_DATAREF, packb([obj.key, obj.size, list(obj.locations)])
+        )
     # jax.Array and anything array-like -> ndarray ext
     if hasattr(obj, "__array__") or isinstance(obj, np.ndarray):
         arr = np.asarray(obj)
@@ -61,6 +82,9 @@ def _ext_hook(code: int, data: bytes):
     if code == _EXT_COMPLEX:
         re, im = unpackb(data)
         return complex(re, im)
+    if code == _EXT_DATAREF:
+        key, size, locations = unpackb(data)
+        return _dataref_type()(key=key, size=size, locations=tuple(locations))
     return msgpack.ExtType(code, data)
 
 
@@ -83,6 +107,22 @@ def unpackb(data: bytes) -> Any:
     return msgpack.unpackb(data, ext_hook=_ext_hook, raw=False, strict_map_key=False)
 
 
+def _hash_view(obj: Any) -> Any:
+    """Pre-hash transform: DataRef leaves hash by (key, size) only. Locations
+    are placement metadata — two refs to the same content must produce the
+    same memo key even when the data has moved or been replicated."""
+    DataRef = _dataref_type()
+    if isinstance(obj, DataRef):
+        return msgpack.ExtType(_EXT_DATAREF, packb([obj.key, obj.size]))
+    if isinstance(obj, dict):
+        return {k: _hash_view(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        out = [_hash_view(v) for v in obj]
+        return tuple(out) if isinstance(obj, tuple) else out
+    return obj
+
+
 def payload_hash(obj: Any) -> str:
     """Canonical content hash of a payload (memoization key component)."""
-    return hashlib.sha256(packb(obj)).hexdigest()
+    return hashlib.sha256(packb(_hash_view(obj))).hexdigest()
+

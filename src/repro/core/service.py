@@ -29,6 +29,14 @@ from . import serializer
 from .auth import Token, TokenAuthority
 from .batching import stack_payloads, unstack_results
 from .containers import ResourceSpec
+from .datastore import (
+    DEFAULT_SPILL_THRESHOLD,
+    DataRef,
+    ObjectStore,
+    resolve_payload,
+    scan_refs,
+    spill_payload,
+)
 from .endpoint import Endpoint
 from .forwarder import Forwarder
 from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
@@ -105,6 +113,8 @@ class FunctionService:
         metrics: Optional[MetricsRegistry] = None,
         journal: Optional[Journal] = None,
         journal_dir: Optional[str] = None,
+        datastore: Optional[ObjectStore] = None,
+        spill_threshold: int = DEFAULT_SPILL_THRESHOLD,
     ):
         self.registry = FunctionRegistry()
         self.memo = MemoCache(max_entries=memo_entries)
@@ -130,6 +140,15 @@ class FunctionService:
         self.journal = journal
         if journal is not None and self.forwarder.journal is None:
             self.forwarder.journal = journal
+        # Data fabric: with a store attached, payload leaves of at least
+        # `spill_threshold` packed bytes travel as DataRefs (resolved at the
+        # endpoint, near the workers), and workers spill oversized results
+        # back into the same store. Without a store refs in user payloads
+        # still route and resolve; nothing auto-spills.
+        self.datastore = datastore
+        self.spill_threshold = spill_threshold
+        if datastore is not None:
+            datastore.bind_metrics(self.metrics)
 
     @property
     def endpoints(self) -> Dict[str, Endpoint]:
@@ -273,6 +292,18 @@ class FunctionService:
         container = inv.container
         if container == "default" and rf.requirements.preferred_container:
             container = rf.requirements.preferred_container
+        # Data fabric: spill (or just scan for) DataRef leaves AFTER the memo
+        # digest — the key is computed over the original payload, and the
+        # location-free hash view keeps it identical either way.
+        refs: list = []
+        if not wire:
+            if self.datastore is not None:
+                payload, refs = spill_payload(
+                    payload, self.datastore, self.spill_threshold,
+                    metrics=self.metrics,
+                )
+            else:
+                refs = scan_refs(payload)
         env = TaskEnvelope(
             task_id=future.task_id,
             function_id=inv.function_id,
@@ -282,6 +313,13 @@ class FunctionService:
             memoize=digest is not None,
             max_retries=inv.max_retries,
             affinity_hint=inv.affinity_hint,
+            data_refs=tuple((r.key, r.size) for r in refs),
+            spill_store=(
+                self.datastore.store_id if self.datastore is not None else None
+            ),
+            spill_threshold=(
+                self.spill_threshold if self.datastore is not None else None
+            ),
         )
         env.timestamps.client_submit = future.timestamps.client_submit
         env.timestamps.service_in = future.timestamps.service_in
@@ -537,9 +575,25 @@ class FunctionService:
                 container=entry.container,
                 requirements=entry.requirements,
                 max_retries=entry.max_retries,
+                spill_store=(
+                    self.datastore.store_id
+                    if self.datastore is not None else None
+                ),
+                spill_threshold=(
+                    self.spill_threshold
+                    if self.datastore is not None else None
+                ),
             )
             env.timestamps.client_submit = now
             env.timestamps.service_in = now
+            # re-discover DataRef leaves: the journal holds the small
+            # ref-bearing bytes, and endpoints resolve from a ref's own
+            # locations (fs:// stores re-attach by path after a restart)
+            try:
+                refs = scan_refs(serializer.unpackb(entry.payload))
+            except Exception:
+                refs = []
+            env.data_refs = tuple((r.key, r.size) for r in refs)
             self.journal.append(  # idempotent under the fold
                 "task", "submitted",
                 task_id=entry.task_id, function_id=entry.function_id,
@@ -562,6 +616,26 @@ class FunctionService:
     @staticmethod
     def result(future: TaskFuture, timeout: Optional[float] = None) -> Any:
         return future.result(timeout)
+
+    # -- data fabric client surface --------------------------------------------
+    def put_data(self, value: Any) -> DataRef:
+        """Store `value` once and get a :class:`DataRef` usable as a payload
+        leaf in any number of invocations — the N-tasks-share-one-dataset
+        pattern (each endpoint fetches the blob once into its locality
+        cache; the Forwarder never carries it inline)."""
+        if self.datastore is None:
+            raise ValueError("put_data() needs a datastore attached to the service")
+        blob = serializer.packb(value)
+        key = self.datastore.put(blob)
+        return DataRef(key=key, size=len(blob),
+                       locations=(self.datastore.store_id,))
+
+    def fetch(self, value: Any, timeout: Optional[float] = None) -> Any:
+        """Materialize any DataRef leaves in `value` (a result, a payload, or
+        a TaskFuture whose result may carry spilled leaves)."""
+        if isinstance(value, TaskFuture):
+            value = value.result(timeout)
+        return resolve_payload(value, metrics=self.metrics)
 
     # -- hooks -----------------------------------------------------------------
     def _observe_completion(self, future: TaskFuture) -> None:

@@ -158,11 +158,32 @@ class Worker(threading.Thread):
         try:
             rf = self.registry.get(env.function_id)
             payload = serializer.unpackb(env.payload) if isinstance(env.payload, bytes) else env.payload
+            if getattr(env, "data_refs", ()):
+                # materialize DataRef leaves in parallel across workers; the
+                # dispatching endpoint warmed its locality cache and attached
+                # it as env.data_cache. A path that bypassed dispatch (direct
+                # executor submission, speculation backups holding unpacked
+                # payloads) resolves straight from the refs' store locations.
+                from .datastore import resolve_payload
+
+                payload = resolve_payload(
+                    payload,
+                    cache=getattr(env, "data_cache", None),
+                    decoded=getattr(env, "data_decoded", None),
+                )
             key = (env.function_id, env.container)
             executable, cold, dt = self.warm_pool.get_or_compile(
                 key, lambda: build_executable(rf, payload)
             )
             value = executable(payload)
+            if getattr(env, "spill_store", None) and env.spill_threshold:
+                # result spill: oversized result leaves stay in the object
+                # store near where they were computed; only refs travel the
+                # result path back through the fabric
+                from .datastore import get_store, spill_payload
+
+                store = get_store(env.spill_store)
+                value, _ = spill_payload(value, store, env.spill_threshold)
             if rf.metadata.get("serialize_result", True):
                 # wire-faithful: results cross the executor/manager boundary as
                 # bytes; deserialized once at the service edge.

@@ -345,6 +345,152 @@ class TestWorkflowResume:
 
 
 # ---------------------------------------------------------------------------
+# Data fabric durability: spilled payloads across crash/restart, speculation
+# ---------------------------------------------------------------------------
+def spill_sum(doc):
+    with _EXECUTED_LOCK:
+        EXECUTED.append(doc["i"])
+    import numpy as np
+
+    return int(np.asarray(doc["pad"]).sum()) + doc["i"]
+
+
+class TestDataFabricDurability:
+    def test_resume_reruns_spilled_payload_after_restart(self, tmp_path):
+        """A journaled task whose payload spilled into a filesystem store
+        must re-run after a full crash/restart: the WAL holds only a DataRef,
+        the new process holds no store registry, and the ref still resolves
+        because fs:// stores re-attach by path."""
+        import numpy as np
+
+        from repro.core import FileSystemStore, reset_store_registry
+        from repro.core.datastore import scan_refs, spill_payload
+
+        wal = str(tmp_path / "wal")
+        store = FileSystemStore(os.path.join(wal, "store"))
+        svc = FunctionService(
+            journal_dir=wal, datastore=store, spill_threshold=1024,
+        )
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(spill_sum)
+        pad = np.ones(1024, dtype=np.int64)  # 8 KiB: spills
+        done = svc.run(fid, {"i": 1, "pad": pad})
+        assert done.result(10) == 1025
+        # journaled-but-never-executed spilled work, then the fabric dies:
+        spilled, refs = spill_payload({"i": 5, "pad": pad}, store, 1024)
+        assert refs, "fixture must actually spill"
+        svc.journal.append(
+            "task", "submitted", task_id="t-spilled", function_id=fid,
+            payload=serializer.packb(spilled), container="default",
+            requirements=[], max_retries=2, owner=None,
+        )
+        svc.journal.close()
+        svc.shutdown()
+        reset_store_registry()  # a restarted process starts with no stores
+
+        svc2 = FunctionService()
+        svc2.make_endpoint("ep2", n_executors=1)
+        assert svc2.register_function(spill_sum) == fid
+        report = svc2.resume(journal_dir=wal)
+        assert set(report.futures) == {"t-spilled"}
+        assert report.futures["t-spilled"].result(10) == 1029
+        assert EXECUTED == [1, 5]
+        st = svc2.journal.state()
+        assert st.tasks["t-spilled"].terminal
+        assert st.duplicate_completions == 0
+        svc2.shutdown()
+
+    def test_resume_fails_cleanly_when_blobs_are_gone(self, tmp_path):
+        """Losing the blob directory must surface as a task failure, not a
+        hang or a duplicate commitment."""
+        import shutil
+
+        import numpy as np
+
+        from repro.core import FileSystemStore, reset_store_registry
+        from repro.core.datastore import spill_payload
+
+        wal = str(tmp_path / "wal")
+        blob_dir = os.path.join(wal, "store")
+        store = FileSystemStore(blob_dir)
+        svc = FunctionService(journal_dir=wal)
+        svc.make_endpoint("ep", n_executors=1)
+        fid = svc.register_function(spill_sum)
+        pad = np.ones(512, dtype=np.int64)
+        spilled, _ = spill_payload({"i": 0, "pad": pad}, store, 1024)
+        svc.journal.append(
+            "task", "submitted", task_id="t-orphan", function_id=fid,
+            payload=serializer.packb(spilled), container="default",
+            requirements=[], max_retries=0, owner=None,
+        )
+        svc.journal.close()
+        svc.shutdown()
+        reset_store_registry()
+        shutil.rmtree(blob_dir)  # the data is gone for good
+
+        svc2 = FunctionService()
+        svc2.make_endpoint("ep2", n_executors=1)
+        svc2.register_function(spill_sum)
+        report = svc2.resume(journal_dir=wal)
+        fut = report.futures["t-orphan"]
+        with pytest.raises(Exception):
+            fut.result(10)
+        assert svc2.journal.state().duplicate_completions == 0
+        svc2.shutdown()
+
+    def test_speculation_survives_restart_without_double_commit(self, tmp_path):
+        """Chaos-lite: a speculating fabric over spilled payloads is killed
+        mid-stream and resumed; every task commits exactly once even though
+        backup copies of stragglers were in flight."""
+        import time as _time
+
+        import numpy as np
+
+        from repro.core import FileSystemStore, reset_store_registry
+
+        wal = str(tmp_path / "wal")
+        pad = np.ones(1024, dtype=np.int64)
+
+        def build(with_journal):
+            fwd = Forwarder(
+                policy="eta_aware", speculation=True,
+                speculation_eta_factor=0.5, speculation_min_age_s=0.01,
+                watchdog_interval_s=0.01,
+            )
+            svc = FunctionService(
+                forwarder=fwd,
+                journal_dir=wal if with_journal else None,
+                datastore=FileSystemStore(os.path.join(wal, "store")),
+                spill_threshold=1024,
+            )
+            svc.make_endpoint("sp0", n_executors=1, workers_per_executor=2)
+            svc.make_endpoint("sp1", n_executors=1, workers_per_executor=2)
+            return svc, svc.register_function(spill_sum)
+
+        svc, fid = build(with_journal=True)
+        futs = svc.batch_run(
+            fid, [{"i": i, "pad": pad} for i in range(8)], max_retries=3,
+        )
+        # kill the fabric while some tasks (and possibly backups) fly
+        _time.sleep(0.05)
+        svc.journal.close()
+        svc.shutdown()
+        reset_store_registry()
+
+        svc2, fid2 = build(with_journal=False)
+        report = svc2.resume(journal_dir=wal)
+        for fut in report.futures.values():
+            assert fut.result(30) >= 1024
+        st = svc2.journal.state()
+        assert st.duplicate_completions == 0
+        assert not any("#eta" in tid for tid in st.tasks)
+        done = [t for t, e in st.tasks.items() if e.terminal]
+        assert len(done) == 8
+        _ = futs  # pre-crash futures die with the old fabric
+        svc2.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # Full fabric crash/restart sweep (the chaos tier, in-suite)
 # ---------------------------------------------------------------------------
 @pytest.mark.slow

@@ -1,0 +1,306 @@
+"""Predictive routing tier: runtime/transfer predictors, the ``eta_aware``
+policy, and ETA-overrun backup speculation."""
+import math
+import time
+
+import pytest
+
+from repro.core import (
+    Forwarder,
+    FunctionService,
+    RuntimePredictor,
+    TaskEnvelope,
+    TaskFuture,
+    TaskPredictor,
+    TransferPredictor,
+)
+
+
+class FakeEndpoint:
+    """Routing-only endpoint stub (mirrors tests/test_forwarder.py): accepts
+    submissions without executing, so futures stay open and queue state is
+    fully controlled by the test."""
+
+    def __init__(self, eid, capacity=4, caps=None):
+        self.endpoint_id = eid
+        self._capacity = capacity
+        self.submitted = []
+        if caps is not None:
+            self.capabilities = lambda: caps
+
+    def is_alive(self, max_heartbeat_age_s=None):
+        return True
+
+    def capacity(self):
+        return self._capacity
+
+    def has_warm(self, key):
+        return False
+
+    def submit(self, env, future):
+        self.submitted.append(env)
+
+
+# ------------------------------------------------------- rolling averages
+def test_rolling_average_uses_last_n_only():
+    p = RuntimePredictor(last_n=5)
+    # a trending trail: early observations must age out of the window
+    for v in range(20):
+        p.record("f", "ep", float(v))
+    assert p.predict("f", "ep") == pytest.approx(sum(range(15, 20)) / 5)
+
+
+def test_rolling_average_converges_on_stationary_runtime():
+    p = RuntimePredictor(last_n=10)
+    for _ in range(50):
+        p.record("f", "ep", 0.25)
+    assert p.predict("f", "ep") == pytest.approx(0.25)
+
+
+def test_predictions_are_per_function_endpoint_pair():
+    p = RuntimePredictor()
+    p.record("f", "fast", 0.01)
+    p.record("f", "slow", 1.0)
+    p.record("g", "fast", 0.5)
+    assert p.predict("f", "fast") == pytest.approx(0.01)
+    assert p.predict("f", "slow") == pytest.approx(1.0)
+    assert p.predict("g", "fast") == pytest.approx(0.5)
+
+
+# ------------------------------------------------------- cold-start fallback
+def test_cold_start_falls_back_to_cross_endpoint_mean():
+    p = RuntimePredictor()
+    p.record("f", "a", 0.2)
+    p.record("f", "b", 0.4)
+    # unmeasured pair: pooled mean across the function's measured endpoints
+    assert p.predict("f", "c") == pytest.approx(0.3)
+    assert not p.has_history("f", "c")
+
+
+def test_cold_start_with_no_history_is_none():
+    p = RuntimePredictor()
+    assert p.predict("f", "anywhere") is None
+    assert p.global_mean() is None
+
+
+def test_cold_start_counter_increments():
+    from repro.core import MetricsRegistry
+
+    m = MetricsRegistry()
+    p = RuntimePredictor(metrics=m)
+    p.record("f", "a", 0.1)
+    p.predict("f", "b")  # fallback path
+    p.predict("f", "a")  # direct path — must NOT count
+    assert m.counter("predictor.cold_starts").value == 1
+    assert m.counter("predictor.observations").value == 1
+
+
+# ------------------------------------------------------- transfer estimator
+def test_transfer_estimate_scales_with_bytes():
+    t = TransferPredictor(bandwidth_bps=1 << 30, latency_s=1e-3)
+    small = t.estimate(1 << 10)
+    big = t.estimate(1 << 30)
+    assert small == pytest.approx(1e-3 + (1 << 10) / (1 << 30))
+    assert big == pytest.approx(1e-3 + 1.0)
+    assert big > 100 * small
+
+
+def test_transfer_record_adapts_bandwidth():
+    t = TransferPredictor(bandwidth_bps=1 << 30, latency_s=0.0, alpha=1.0)
+    t.record(1 << 20, 1.0)  # observed: 1 MiB took a full second
+    assert t.estimate(1 << 20) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------- ETA composition
+def test_eta_adds_queue_delay_and_transfer():
+    tp = TaskPredictor(transfer=TransferPredictor(bandwidth_bps=1 << 20,
+                                                  latency_s=0.0))
+    tp.record("f", "ep", 0.1)
+    idle = tp.eta("f", "ep", transfer_bytes=0, outstanding=0, capacity=4)
+    assert idle == pytest.approx(0.1)
+    queued = tp.eta("f", "ep", transfer_bytes=0, outstanding=8, capacity=4)
+    assert queued == pytest.approx(0.1 + 8 * 0.1 / 4)
+    moving = tp.eta("f", "ep", transfer_bytes=1 << 20, outstanding=0, capacity=4)
+    assert moving == pytest.approx(0.1 + 1.0)
+
+
+def test_eta_error_feeds_pessimism_and_overrun_bound():
+    tp = TaskPredictor(queue_error_alpha=1.0)
+    tp.record("f", "ep", 0.1)
+    tp.observe_eta("ep", predicted_s=0.1, actual_s=0.5)  # 0.4 s overrun
+    assert tp.queue_error("ep") == pytest.approx(0.4)
+    # underruns must not produce negative corrections
+    tp.observe_eta("ep", predicted_s=0.5, actual_s=0.1)
+    assert tp.queue_error("ep") == pytest.approx(0.0)
+    bound = tp.overrun_bound("ep", predicted_s=0.2, factor=3.0, min_age_s=0.05)
+    assert bound == pytest.approx(max(0.05, 0.2 * 3.0 + tp.queue_error("ep")))
+
+
+# ------------------------------------------------------- eta_aware routing
+def _prime(fwd, fid, fast, slow, fast_s=0.01, slow_s=1.0):
+    for _ in range(10):
+        fwd.predictor.record(fid, fast.endpoint_id, fast_s)
+        fwd.predictor.record(fid, slow.endpoint_id, slow_s)
+
+
+def test_eta_aware_prefers_measured_fast_endpoint():
+    fast, slow = FakeEndpoint("fast", capacity=4), FakeEndpoint("slow", capacity=4)
+    fwd = Forwarder(policy="eta_aware", seed=0)
+    fwd.register(fast)
+    fwd.register(slow)
+    try:
+        _prime(fwd, "f", fast, slow)
+        picks = []
+        for i in range(8):
+            fut = TaskFuture(f"t{i}")
+            picks.append(fwd.submit(
+                TaskEnvelope(task_id=f"t{i}", function_id="f", payload=b""),
+                fut,
+            ))
+        # the fast endpoint's queue has to back up 100 deep before its ETA
+        # matches one slow execution, so every pick lands fast
+        assert picks == ["fast"] * 8
+    finally:
+        fwd.shutdown()
+
+
+def test_eta_aware_explores_unmeasured_pairs_first():
+    a, b = FakeEndpoint("a"), FakeEndpoint("b")
+    fwd = Forwarder(policy="eta_aware", seed=0)
+    fwd.register(a)
+    fwd.register(b)
+    try:
+        fwd.predictor.record("f", "a", 0.01)
+        fut = TaskFuture("t0")
+        picked = fwd.submit(
+            TaskEnvelope(task_id="t0", function_id="f", payload=b""), fut
+        )
+        assert picked == "b"  # unmeasured pair wins over any measured ETA
+    finally:
+        fwd.shutdown()
+
+
+def test_eta_aware_beats_random_p99_on_skewed_fabric():
+    """Deterministic replay: K tasks over a 0.01 s endpoint (cap 8) and a
+    1.0 s endpoint (cap 1). Synthetic completion time of the j-th task
+    assigned to an endpoint is runtime * ceil((j+1)/capacity) — pure queueing,
+    no sleeping — and eta_aware's p99 must beat random's."""
+    runtimes = {"fast": 0.01, "slow": 1.0}
+    caps = {"fast": 8, "slow": 1}
+
+    def simulate(policy, seed=3):
+        eps = [FakeEndpoint(e, capacity=caps[e]) for e in ("fast", "slow")]
+        fwd = Forwarder(policy=policy, seed=seed)
+        for ep in eps:
+            fwd.register(ep)
+        try:
+            if fwd.predictor is not None:  # random routes blind by design
+                _prime(fwd, "f", eps[0], eps[1],
+                       fast_s=runtimes["fast"], slow_s=runtimes["slow"])
+            counts = {"fast": 0, "slow": 0}
+            lats = []
+            for i in range(64):
+                fut = TaskFuture(f"t{i}")
+                eid = fwd.submit(
+                    TaskEnvelope(task_id=f"t{i}", function_id="f", payload=b""),
+                    fut,
+                )
+                counts[eid] += 1
+                lats.append(
+                    runtimes[eid] * math.ceil(counts[eid] / caps[eid])
+                )
+        finally:
+            fwd.shutdown()
+        lats.sort()
+        return lats[int(0.99 * (len(lats) - 1))]
+
+    assert simulate("eta_aware") < simulate("random")
+
+
+# ------------------------------------------------------- speculation wiring
+def sleepy(doc):
+    time.sleep(doc.get("t", 0.0))
+    return doc.get("i", 0)
+
+
+def test_eta_overrun_trips_backup_speculation():
+    """A live mini-fabric with an aggressive overrun bound: backups launch,
+    every task still completes exactly once, and the journal-facing counter
+    contract holds (losers dedupe, never double-commit)."""
+    fwd = Forwarder(
+        policy="eta_aware",
+        speculation=True,
+        speculation_eta_factor=0.5,   # trip on ~half the predicted ETA
+        speculation_min_age_s=0.01,
+        watchdog_interval_s=0.01,
+    )
+    svc = FunctionService(forwarder=fwd)
+    svc.make_endpoint("s0", n_executors=1, workers_per_executor=2)
+    svc.make_endpoint("s1", n_executors=1, workers_per_executor=2)
+    fid = svc.register_function(sleepy, name="spec_sleepy")
+    try:
+        outs = [
+            f.result(30)
+            for f in svc.batch_run(
+                fid, [{"i": i, "t": 0.05} for i in range(12)]
+            )
+        ]
+        assert sorted(outs) == list(range(12))
+        deadline = time.monotonic() + 2.0
+        while fwd.backups_launched == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert fwd.backups_launched > 0
+        assert fwd.stats()["speculation"] is True
+        assert (
+            svc.metrics.counter("predictor.backups_launched").value
+            == fwd.backups_launched
+        )
+    finally:
+        svc.shutdown()
+
+
+def test_speculation_never_double_completes_with_journal(tmp_path):
+    fwd = Forwarder(
+        policy="eta_aware",
+        speculation=True,
+        speculation_eta_factor=0.5,
+        speculation_min_age_s=0.01,
+        watchdog_interval_s=0.01,
+    )
+    svc = FunctionService(forwarder=fwd, journal_dir=str(tmp_path / "wal"))
+    svc.make_endpoint("j0", n_executors=1, workers_per_executor=2)
+    svc.make_endpoint("j1", n_executors=1, workers_per_executor=2)
+    fid = svc.register_function(sleepy, name="spec_journaled")
+    try:
+        futs = svc.batch_run(fid, [{"i": i, "t": 0.04} for i in range(10)])
+        assert sorted(f.result(30) for f in futs) == list(range(10))
+        time.sleep(0.2)  # let speculation losers drain through dedupe
+        st = svc.journal.state()
+        assert st.duplicate_completions == 0
+        assert all(st.tasks[f.task_id].terminal for f in futs)
+        # backup task ids ("<tid>#eta") must never appear as journal keys:
+        # backups are never journaled, they only race toward the canonical id
+        assert not any("#eta" in tid for tid in st.tasks)
+    finally:
+        svc.shutdown()
+
+
+def test_speculation_respects_requirements():
+    """A backup may only land on an endpoint satisfying the envelope's
+    capability requirements — if no second such endpoint exists, no backup."""
+    gpu = FakeEndpoint("gpu", capacity=2, caps={"gpu"})
+    cpu = FakeEndpoint("cpu", capacity=2, caps=set())
+    fwd = Forwarder(policy="least_outstanding", speculation=True, seed=0)
+    fwd.register(gpu)
+    fwd.register(cpu)
+    try:
+        env = TaskEnvelope(
+            task_id="t0", function_id="f", payload=b"",
+            requirements=("gpu",),
+        )
+        fut = TaskFuture("t0")
+        assert fwd.submit(env, fut) == "gpu"
+        assert fwd._launch_backup(env, fwd._records["gpu"]) is False
+        assert fwd.backups_launched == 0
+    finally:
+        fwd.shutdown()

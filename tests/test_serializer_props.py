@@ -146,3 +146,122 @@ def test_every_unpacked_array_is_writable(spec):
     assert out.flags.writeable
     if out.size:
         out.flat[0] = 0                   # must not raise
+
+
+# ------------------------------------------------------------ DataRef props
+from repro.core.datastore import (  # noqa: E402
+    DataRef,
+    InMemoryStore,
+    resolve_payload,
+    spill_payload,
+)
+
+_HEX = "0123456789abcdef"
+
+datarefs = st.builds(
+    DataRef,
+    key=st.text(alphabet=_HEX, min_size=64, max_size=64),
+    size=st.integers(min_value=0, max_value=2**40),
+    locations=st.lists(
+        st.sampled_from(["mem://a", "mem://b", "fs:///tmp/x", "fs:///tmp/y"]),
+        max_size=3, unique=True,
+    ).map(tuple),
+)
+
+# the tentpole payload space: DataRefs anywhere a leaf can live
+ref_payloads = st.recursive(
+    st.one_of(scalars, datarefs, array_specs.map(build_array)),
+    lambda children: st.one_of(
+        st.lists(children, max_size=4),
+        st.dictionaries(st.text(max_size=8), children, max_size=4),
+    ),
+    max_leaves=10,
+)
+
+
+def assert_ref_payload_equal(a, b):
+    if isinstance(a, DataRef):
+        assert a == b  # frozen dataclass equality: key, size, and locations
+    elif isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            assert_ref_payload_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            assert_ref_payload_equal(x, y)
+    else:
+        assert_payload_equal(a, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ref_payloads)
+def test_dataref_payload_roundtrip_identity(payload):
+    """DataRef leaves nested in dicts/lists/arrays survive the wire exactly —
+    key, declared size, and every advertised location."""
+    assert_ref_payload_equal(payload, roundtrip(payload))
+
+
+@settings(max_examples=60, deadline=None)
+@given(ref_payloads)
+def test_dataref_payload_hash_stability(payload):
+    h = payload_hash(payload)
+    assert payload_hash(payload) == h
+    assert payload_hash(roundtrip(payload)) == h
+
+
+def _strip_locations(obj):
+    if isinstance(obj, DataRef):
+        return DataRef(key=obj.key, size=obj.size, locations=("mem://moved",))
+    if isinstance(obj, dict):
+        return {k: _strip_locations(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_strip_locations(v) for v in obj]
+    return obj
+
+
+@settings(max_examples=60, deadline=None)
+@given(ref_payloads)
+def test_payload_hash_ignores_where_data_lives(payload):
+    """Memo keys must be location-free: rewriting every ref's location set
+    (data migrated to another store) leaves the payload hash unchanged."""
+    assert payload_hash(_strip_locations(payload)) == payload_hash(payload)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=512),   # array length
+    st.integers(min_value=-2, max_value=2),    # threshold offset from nbytes
+)
+def test_spill_threshold_boundary_stability(n, delta):
+    """spill(resolve) is the identity around the threshold boundary: leaves
+    spill iff their in-memory size >= threshold, and resolving restores the
+    exact array either way."""
+    store = InMemoryStore(register=False)
+    arr = np.arange(n, dtype=np.float64)
+    payload = {"x": arr, "tag": n}
+    threshold = max(1, arr.nbytes + delta)
+    spilled, refs = spill_payload(payload, store, threshold)
+    should_spill = arr.nbytes >= threshold
+    assert isinstance(spilled["x"], DataRef) == should_spill
+    assert len(refs) == (1 if should_spill else 0)
+    resolved = resolve_payload(spilled)
+    np.testing.assert_array_equal(resolved["x"], arr)
+    assert resolved["tag"] == n
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=256))
+def test_spill_is_idempotent_and_content_addressed(n):
+    """Spilling the same payload twice lands on the same blob key (content
+    addressing), and re-spilling an already-spilled payload is a no-op that
+    still reports the existing refs."""
+    store = InMemoryStore(register=False)
+    payload = {"x": np.full(n, 7, dtype=np.int64)}
+    s1, r1 = spill_payload(payload, store, threshold=1)
+    s2, r2 = spill_payload(payload, store, threshold=1)
+    assert [r.key for r in r1] == [r.key for r in r2]
+    assert len(store) == 1
+    s3, r3 = spill_payload(s1, store, threshold=1)
+    assert s3["x"] == s1["x"]
+    assert [r.key for r in r3] == [r.key for r in r1]
