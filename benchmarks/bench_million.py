@@ -1,0 +1,350 @@
+"""Million-task scale tier: sharded fair-mode forwarder vs. the single-shard
+degenerate case, plus multi-tenant fairness under a greedy flood.
+
+Two experiments:
+
+1. **throughput** — closed-loop no-op tasks through a 4-endpoint fair-mode
+   fabric. Endpoints model funcX's remote dispatch: each delivered TaskBatch
+   frame costs one network round-trip (a GIL-releasing sleep), then every
+   task in it completes. In fair mode all routing and delivery serializes
+   through the forwarder's pump thread, so a single Forwarder keeps at most
+   one dispatch round-trip in flight; the ShardedForwarder's N per-shard
+   pumps (each with its own lock, DRR drain, and delivery loop) overlap N.
+   Full mode pushes ≥10^6 tasks through the sharded fabric and asserts ≥2x
+   the single-shard rate, tracking tasks/s, sampled p99 sojourn, and peak
+   RSS. The single-shard baseline runs 1/8 of the tasks (rates compare at
+   steady state; nobody needs to wait 3 minutes for a known-slower config).
+2. **fairness** — service-level and journaled: a light interactive tenant's
+   closed-loop p99 alone vs. behind a greedy tenant's windowed flood, with
+   per-tenant quota admission (greedy capped, rejections carry
+   ``retry_after``) and weighted DRR (the light tenant's next task jumps the
+   greedy backlog). Asserts the light tenant's mixed p99 stays within 2x of
+   its solo p99 (full mode) and that the journal fold shows ZERO duplicate
+   terminal commitments (``duplicate_completions == 0``) in every run.
+
+Results land in ``benchmarks/results/million.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import tempfile
+import threading
+import time
+
+from repro.core import (
+    AdmissionError,
+    FairnessPolicy,
+    Forwarder,
+    FunctionService,
+    ShardedForwarder,
+    TaskEnvelope,
+    TaskFuture,
+    TokenAuthority,
+)
+from repro.core.auth import (
+    SCOPE_INVOKE,
+    SCOPE_REGISTER_ENDPOINT,
+    SCOPE_REGISTER_FUNCTION,
+)
+
+from .common import emit, percentile, scaled, sleeper, smoke_mode
+
+N_TOTAL = scaled(1_000_000, 10_000)  # through the sharded fabric
+N_SHARDS = 8
+N_EPS = 4
+DISPATCH_RTT_S = 0.012  # forwarder->endpoint frame round-trip (paper: WAN hop)
+EP_CAPACITY = 64        # per-endpoint worker ceiling == frame size
+N_THREADS = 8           # closed-loop submitter threads (2 per tenant)
+WINDOW = 1024           # per-thread in-flight window
+SAMPLE_EVERY = 8        # sojourn-latency sampling: every 8th window
+
+
+class RemoteEndpoint:
+    """A funcX-style remote endpoint as seen from the forwarder: delivering a
+    TaskBatch frame costs one dispatch RTT (GIL released, like any socket
+    write+read), after which the frame's no-op tasks complete."""
+
+    def __init__(self, eid, capacity=EP_CAPACITY):
+        self.endpoint_id = eid
+        self._capacity = capacity
+
+    def is_alive(self, max_heartbeat_age_s=None):
+        return True
+
+    def capacity(self):
+        return self._capacity
+
+    def has_warm(self, key):
+        return False
+
+    def submit_batch(self, frame):
+        time.sleep(DISPATCH_RTT_S)
+        for _env, fut in frame.pairs():
+            fut.set_result(None)
+
+    def submit(self, env, future):  # per-task fallback path
+        time.sleep(DISPATCH_RTT_S)
+        future.set_result(None)
+
+    def shutdown(self):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# 1. throughput: single-shard vs sharded fair-mode fabric
+# ---------------------------------------------------------------------------
+def _run_fabric(make_fwd, n_tasks, n_threads=N_THREADS):
+    fwd = make_fwd()
+    for i in range(N_EPS):
+        fwd.register(RemoteEndpoint(f"ep{i}"))
+    per = n_tasks // n_threads
+    barrier = threading.Barrier(n_threads + 1)
+    lats = []  # sampled submit->complete sojourns, appended under the GIL
+
+    def submitter(k):
+        tenant = f"tenant{k % 4}"
+        barrier.wait()
+        for w, base in enumerate(range(0, per, WINDOW)):
+            m = min(WINDOW, per - base)
+            pairs = []
+            for j in range(m):
+                tid = f"m{k}-{base + j}"
+                pairs.append(
+                    (TaskEnvelope(task_id=tid, function_id="f", payload=b"",
+                                  tenant=tenant),
+                     TaskFuture(tid))
+                )
+            if w % SAMPLE_EVERY == 0:
+                t0 = time.perf_counter()
+                for _env, fut in pairs:
+                    fut.add_done_callback(
+                        lambda f, t0=t0: lats.append(time.perf_counter() - t0)
+                    )
+            fwd.submit_many(pairs)
+            for _env, fut in pairs:
+                fut.result(300)
+
+    threads = [
+        threading.Thread(target=submitter, args=(k,)) for k in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.monotonic()
+    for t in threads:
+        t.join()
+    dt = time.monotonic() - t0
+    fwd.shutdown()
+    n_done = n_threads * per
+    return {
+        "n_tasks": n_done,
+        "tasks_per_s": n_done / dt,
+        "p99_sojourn_ms": percentile(lats, 99) * 1e3,
+        "wall_s": dt,
+    }
+
+
+def _throughput():
+    fair = dict(max_batch=EP_CAPACITY, watchdog_interval_s=0.5)
+    single = _run_fabric(
+        lambda: Forwarder(fairness=FairnessPolicy(), **fair),
+        max(N_TOTAL // N_SHARDS, 2_000),
+    )
+    sharded = _run_fabric(
+        lambda: ShardedForwarder(
+            n_shards=N_SHARDS, fairness=FairnessPolicy(), **fair
+        ),
+        N_TOTAL,
+    )
+    speedup = sharded["tasks_per_s"] / single["tasks_per_s"]
+    peak_rss_mib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    if not smoke_mode():
+        assert sharded["n_tasks"] >= 1_000_000, (
+            f"full mode must push >=10^6 tasks, got {sharded['n_tasks']}"
+        )
+        assert speedup >= 2.0, (
+            f"sharded fabric must sustain >=2x the single-shard rate: "
+            f"{sharded['tasks_per_s']:.0f}/s vs {single['tasks_per_s']:.0f}/s "
+            f"({speedup:.2f}x)"
+        )
+    return {
+        "n_shards": N_SHARDS,
+        "dispatch_rtt_s": DISPATCH_RTT_S,
+        "single": single,
+        "sharded": sharded,
+        "speedup": speedup,
+        "peak_rss_mib": peak_rss_mib,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. fairness: light tenant p99, solo vs behind a greedy flood
+# ---------------------------------------------------------------------------
+TASK_S = 0.005
+GREEDY_QUOTA = 12    # < fabric capacity: admission keeps headroom for others
+GREEDY_WINDOW = 36   # >> quota: every burst exercises admission rejection
+
+
+def _make_fabric(authority, journal_dir):
+    svc = FunctionService(
+        authority=authority,
+        fairness=FairnessPolicy(),
+        n_shards=4,
+        journal_dir=journal_dir,
+    )
+    ep_token = authority.issue("ops", scopes=(SCOPE_REGISTER_ENDPOINT,))
+    for i in range(2):
+        svc.make_endpoint(
+            f"fair{i}", n_executors=1, workers_per_executor=12, token=ep_token
+        )
+    fid = svc.register_function(
+        sleeper, name="million_sleeper", public=True,
+        token=authority.issue("owner", scopes=(SCOPE_REGISTER_FUNCTION,)),
+    )
+    return svc, fid
+
+
+def _light_loop(svc, fid, token, n, tag):
+    """Closed-loop interactive tenant: one task at a time, per-task latency."""
+    lats = []
+    for i in range(n):
+        t0 = time.perf_counter()
+        svc.run(fid, {"i": i, "t": TASK_S, "tag": tag}, token=token).result(60)
+        lats.append(time.perf_counter() - t0)
+    return percentile(lats, 99) * 1e3
+
+
+def _fairness(tmpdir, n_light):
+    authority = TokenAuthority()
+    # the greedy tenant's quota sits below fabric capacity (admission control
+    # keeps headroom instead of letting one tenant saturate every worker);
+    # the light tenant carries interactive weight so DRR serves its next
+    # task ahead of the greedy backlog
+    authority.set_tenant_profile("greedy", quota=GREEDY_QUOTA, weight=1.0)
+    authority.set_tenant_profile("light", weight=4.0)
+    light_token = authority.issue("light", scopes=(SCOPE_INVOKE,))
+    greedy_token = authority.issue("greedy", scopes=(SCOPE_INVOKE,))
+
+    svc, fid = _make_fabric(authority, os.path.join(tmpdir, "wal-solo"))
+    solo_p99_ms = _light_loop(svc, fid, light_token, n_light, "solo")
+    solo_dup = svc.journal.state().duplicate_completions
+    svc.shutdown()
+
+    svc, fid = _make_fabric(authority, os.path.join(tmpdir, "wal-mixed"))
+    stop = threading.Event()
+    stats = {"submitted": 0, "rejected": 0, "retry_after_ok": True}
+
+    def greedy_flood():
+        # bursts arrive as one batch: admission sees the whole window at once,
+        # so everything beyond the quota rejects instead of sneaking in
+        # between completions
+        i = 0
+        while not stop.is_set():
+            futs = svc.batch_run(
+                fid,
+                [{"i": i + j, "t": TASK_S, "tag": "greedy"}
+                 for j in range(GREEDY_WINDOW)],
+                token=greedy_token,
+            )
+            i += GREEDY_WINDOW
+            for f in futs:
+                try:
+                    f.result(60)
+                    stats["submitted"] += 1
+                except AdmissionError as exc:
+                    stats["rejected"] += 1
+                    if not (exc.retry_after > 0 and exc.tenant == "greedy"):
+                        stats["retry_after_ok"] = False
+
+    flood = threading.Thread(target=greedy_flood)
+    flood.start()
+    time.sleep(0.2)  # let the flood reach steady state before measuring
+    try:
+        mixed_p99_ms = _light_loop(svc, fid, light_token, n_light, "mixed")
+    finally:
+        stop.set()
+        flood.join()
+    mixed_dup = svc.journal.state().duplicate_completions
+    svc.shutdown()
+
+    assert solo_dup == 0 and mixed_dup == 0, (
+        f"journal fold shows duplicate terminal commitments: "
+        f"solo={solo_dup} mixed={mixed_dup}"
+    )
+    assert stats["rejected"] > 0 and stats["retry_after_ok"], (
+        f"greedy windows beyond quota must reject with retry_after: {stats}"
+    )
+    slowdown = mixed_p99_ms / solo_p99_ms
+    if not smoke_mode():
+        assert slowdown <= 2.0, (
+            f"greedy flood must not starve the light tenant: p99 "
+            f"{mixed_p99_ms:.1f}ms mixed vs {solo_p99_ms:.1f}ms solo "
+            f"({slowdown:.2f}x)"
+        )
+    return {
+        "n_light": n_light,
+        "task_s": TASK_S,
+        "greedy_quota": GREEDY_QUOTA,
+        "light_solo_p99_ms": solo_p99_ms,
+        "light_mixed_p99_ms": mixed_p99_ms,
+        "slowdown": slowdown,
+        "greedy_completed": stats["submitted"],
+        "greedy_rejected": stats["rejected"],
+        "duplicate_completions": solo_dup + mixed_dup,
+    }
+
+
+def run():
+    rows = []
+    tput = _throughput()
+    rows.append(emit(
+        "million/single_shard_task", 1e6 / tput["single"]["tasks_per_s"],
+        f"{tput['single']['tasks_per_s']:.0f} tasks/s, "
+        f"p99 sojourn {tput['single']['p99_sojourn_ms']:.0f}ms",
+    ))
+    rows.append(emit(
+        "million/sharded8_task", 1e6 / tput["sharded"]["tasks_per_s"],
+        f"{tput['sharded']['tasks_per_s']:.0f} tasks/s over "
+        f"{tput['sharded']['n_tasks']} tasks ({tput['speedup']:.2f}x single), "
+        f"peak RSS {tput['peak_rss_mib']:.0f} MiB",
+    ))
+
+    n_light = scaled(300, 40)
+    with tempfile.TemporaryDirectory(prefix="repro-million-") as tmpdir:
+        fair = _fairness(tmpdir, n_light)
+    rows.append(emit(
+        "million/light_solo_p99", fair["light_solo_p99_ms"] * 1e3,
+        "interactive tenant alone on the fabric",
+    ))
+    rows.append(emit(
+        "million/light_mixed_p99", fair["light_mixed_p99_ms"] * 1e3,
+        f"{fair['slowdown']:.2f}x solo behind greedy flood; "
+        f"{fair['greedy_rejected']} rejections carried retry_after, "
+        f"{fair['duplicate_completions']} duplicate commitments",
+    ))
+
+    out = os.path.join(os.path.dirname(__file__), "results", "million.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(
+            {"smoke": smoke_mode(), "throughput": tput, "fairness": fair},
+            f, indent=1,
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI smoke runs")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        # re-evaluate module-level sizes chosen before the env var was set
+        N_TOTAL = scaled(1_000_000, 10_000)
+    print("name,us_per_call,derived")
+    run()

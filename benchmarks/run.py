@@ -23,6 +23,7 @@ SUITES = (
     "fault",          # Fig. 7
     "chaos",          # durability tier: faults + full fabric restart, exactly-once
     "datafabric",     # data tier: DataRef vs inline, eta_aware routing, speculation
+    "million",        # scale tier: sharded fair-mode forwarder + tenant fairness
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)
     "batching",       # Fig. 8

@@ -4,7 +4,8 @@ Public API:
     FunctionService, Forwarder, Endpoint, TaskFuture, TokenAuthority, Flow,
     TaskBatch, ResultBatch, BatchCoalescer, MetricsRegistry, Autoscaler,
     Journal, ResultStore, wait, get_result, DataRef, FileSystemStore,
-    InMemoryStore, TaskPredictor
+    InMemoryStore, TaskPredictor, ShardedForwarder, FairnessPolicy,
+    AdmissionError, TenantLedger
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -12,6 +13,7 @@ from .auth import (  # noqa: F401
     SCOPE_REGISTER_ENDPOINT,
     SCOPE_REGISTER_FUNCTION,
     AuthError,
+    TenantProfile,
     Token,
     TokenAuthority,
 )
@@ -70,7 +72,20 @@ from .datastore import (  # noqa: F401
 )
 from .endpoint import Endpoint  # noqa: F401
 from .executor import Executor  # noqa: F401
-from .forwarder import ENDPOINT_POLICIES, EndpointRecord, Forwarder  # noqa: F401
+from .fairness import (  # noqa: F401
+    ANONYMOUS,
+    AdmissionError,
+    DeficitRoundRobin,
+    FairnessPolicy,
+    TenantLedger,
+)
+from .forwarder import (  # noqa: F401
+    ENDPOINT_POLICIES,
+    EndpointRecord,
+    Forwarder,
+    ShardedForwarder,
+    shard_of,
+)
 from .futures import TaskEnvelope, TaskFuture, TaskState  # noqa: F401
 from .heartbeat import HeartbeatMonitor, LatencyTracker  # noqa: F401
 from .interchange import (  # noqa: F401

@@ -37,6 +37,20 @@ class AuthError(PermissionError):
 
 
 @dataclass(frozen=True)
+class TenantProfile:
+    """Fabric-level scheduling profile for one identity (the hosted service's
+    per-user registration record): `quota` caps the tenant's outstanding
+    tasks fabric-wide (None = unlimited; admission rejects beyond it with
+    ``retry_after``), `weight` is its deficit-round-robin fair-share ratio.
+    Consumed by :class:`~repro.core.fairness.FairnessPolicy` via
+    ``bind_profiles``."""
+
+    identity: str
+    quota: Optional[int] = None
+    weight: float = 1.0
+
+
+@dataclass(frozen=True)
 class Token:
     identity: str
     scopes: tuple
@@ -78,6 +92,22 @@ class TokenAuthority:
 
     def __init__(self, secret: Optional[bytes] = None):
         self._secret = secret if secret is not None else os.urandom(32)
+        self._profiles: dict[str, TenantProfile] = {}
+
+    # -- tenant profiles (fairness tier) ---------------------------------
+    def set_tenant_profile(
+        self, identity: str, quota: Optional[int] = None, weight: float = 1.0
+    ) -> TenantProfile:
+        """Declare (or replace) the scheduling profile for `identity`."""
+        prof = TenantProfile(identity=identity, quota=quota, weight=weight)
+        self._profiles[identity] = prof
+        return prof
+
+    def tenant_profile(self, identity: str) -> Optional[TenantProfile]:
+        return self._profiles.get(identity)
+
+    def tenant_profiles(self) -> dict[str, TenantProfile]:
+        return dict(self._profiles)
 
     def issue(
         self,

@@ -451,11 +451,15 @@ def resolve_payload(
                     metrics.counter("data.decoded_hits").inc()
                 return _fresh_copy(decoded[obj.key])
             blob = _fetch_blob(obj, cache, metrics)
-            value = serializer.unpackb(blob)
             if decoded is not None:
+                # cache-bound decode: zero-copy read-only views over the blob
+                # bytes — every hand-out below goes through _fresh_copy, whose
+                # ndarray.copy() yields a writable array, so the upfront
+                # unpack copy was pure waste
+                value = serializer.unpackb(blob, writable=False)
                 decoded[obj.key] = value
                 return _fresh_copy(value)
-            return value
+            return serializer.unpackb(blob)
         if isinstance(obj, dict):
             return {k: walk(v) for k, v in obj.items()}
         if isinstance(obj, (list, tuple)):
@@ -494,7 +498,10 @@ def resolve_packed(
 ) -> bytes:
     """Resolve a *packed* ref-bearing payload back to inline packed bytes
     (the endpoint dispatch path: refs materialize at the endpoint, workers
-    see plain payloads)."""
+    see plain payloads). The intermediate tree is repacked immediately, never
+    handed to user code, so the unpack side rides the zero-copy fast path."""
     return serializer.packb(
-        resolve_payload(serializer.unpackb(packed), cache=cache, metrics=metrics)
+        resolve_payload(
+            serializer.unpackb(packed, writable=False), cache=cache, metrics=metrics
+        )
     )

@@ -564,20 +564,9 @@ class Endpoint:
                 if env.task_id in self._speculated or env.speculative_of:
                     continue
                 self._speculated.add(env.task_id)
-                dup = TaskEnvelope(
-                    task_id=f"{env.task_id}#spec",
-                    function_id=env.function_id,
-                    payload=env.payload,
-                    container=env.container,
-                    requirements=env.requirements,
-                    memoize=env.memoize,
-                    max_retries=0,
-                    speculative_of=env.task_id,
-                    timestamps=env.timestamps,
-                    data_refs=env.data_refs,
-                    spill_store=env.spill_store,
-                    spill_threshold=env.spill_threshold,
-                )
+                # shares the primary's payload object outright — duplicating
+                # a straggler must not duplicate its (possibly large) payload
+                dup = env.clone_speculative("#spec")
                 with self._flock:
                     fut = self.futures.get(env.task_id)
                     if fut is None or fut.done():

@@ -32,15 +32,32 @@ outstanding task routed there is failed over to a surviving endpoint.
 ``TaskFuture.set_result`` is idempotent, so a false-positive death detection
 degrades into a speculative duplicate — first result wins — and a
 false-positive endpoint is resurrected once its heartbeat resumes.
+
+Two scale tiers sit on top (the federated follow-ups' million-task shape):
+
+- :class:`ShardedForwarder` hash-partitions ``task_id → shard`` over N
+  independent ``Forwarder`` instances, each with its own endpoint-record
+  view, submit queues, pump, watchdog, and lock — completions on shard A
+  never contend with routing on shard B. The single ``Forwarder`` is the
+  degenerate one-shard case, so :class:`~repro.core.service.FunctionService`,
+  resume/journal, and speculation work unchanged against either.
+- Multi-tenant fairness (see :mod:`repro.core.fairness`): with a
+  :class:`~repro.core.fairness.FairnessPolicy` attached, submissions pass
+  per-tenant quota admission (reject with ``retry_after`` instead of
+  unbounded queueing), land in per-tenant queues, and the pump drains them
+  deficit-round-robin weighted by tenant — a greedy tenant's backlog cannot
+  starve a light tenant's p99.
 """
 from __future__ import annotations
 
 import random
 import threading
 import time
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .containers import CapabilityError
+from .fairness import ANONYMOUS, AdmissionError, DeficitRoundRobin, FairnessPolicy, TenantLedger
 from .futures import TaskEnvelope, TaskFuture
 from .interchange import BatchCoalescer, iter_frames
 from .journal import Journal, ResultStore
@@ -89,6 +106,7 @@ class EndpointRecord:
         endpoint,                         # Endpoint-shaped: see FakeEndpoint in tests
         pending: Optional[BatchCoalescer] = None,
         metrics: Optional[MetricsRegistry] = None,
+        shard: Optional[str] = None,
     ):
         self.endpoint = endpoint
         self.outstanding: Dict[str, TaskEnvelope] = {}
@@ -98,11 +116,22 @@ class EndpointRecord:
         # Per-endpoint submit queue: routed-but-undelivered (envelope, future)
         # pairs waiting for the pump to coalesce them into a TaskBatch.
         self.pending = pending
+        # Gauge label disambiguator: every shard of a ShardedForwarder keeps
+        # its own record (and measurement view) of each endpoint in one shared
+        # registry; without the label the shards would stomp each other's
+        # series.
+        self.shard = shard
+        # EWMA folds happen outside the forwarder's global lock (completions
+        # must not serialize against routing); this tiny per-record lock makes
+        # the read-modify-write safe against concurrent completer threads.
+        self._stat_lock = threading.Lock()
         metrics = metrics if metrics is not None else MetricsRegistry()
         self._bind_gauges(metrics, reset=True)
 
     def _bind_gauges(self, metrics: MetricsRegistry, reset: bool) -> None:
         labels = {"endpoint": self.endpoint.endpoint_id}
+        if self.shard is not None:
+            labels["shard"] = self.shard
         self._ewma_gauge = metrics.gauge(
             "forwarder.endpoint_latency_ewma_s", labels
         )
@@ -136,6 +165,13 @@ class EndpointRecord:
     def sync_outstanding(self) -> None:
         self._outstanding_gauge.set(len(self.outstanding))
 
+    def observe_latency(self, lat: float, alpha: float) -> None:
+        """Fold one observed completion latency into the EWMA. Safe to call
+        without the forwarder lock (see `_stat_lock`)."""
+        with self._stat_lock:
+            cur = self._ewma_gauge.value
+            self._ewma_gauge.set(lat if cur is None else alpha * lat + (1 - alpha) * cur)
+
 
 class Forwarder:
     def __init__(
@@ -154,6 +190,9 @@ class Forwarder:
         speculation: bool = False,
         speculation_eta_factor: float = 3.0,
         speculation_min_age_s: float = 0.05,
+        fairness: Optional[FairnessPolicy] = None,
+        tenant_ledger: Optional[TenantLedger] = None,
+        shard: Optional[str] = None,
     ):
         if policy not in ENDPOINT_POLICIES:
             raise ValueError(
@@ -193,6 +232,21 @@ class Forwarder:
         self.max_delay_s = max_delay_s
         self.batches_delivered = 0
         self.tasks_delivered = 0
+        # Multi-tenant fairness: quota admission at submit, per-tenant queues
+        # drained deficit-round-robin by the pump. The ledger may be shared
+        # (one ledger across every ShardedForwarder shard → quotas cap a
+        # tenant's fabric-wide footprint).
+        self.fairness = fairness
+        self.shard_label = shard
+        if fairness is not None:
+            self.ledger = tenant_ledger if tenant_ledger is not None else TenantLedger()
+            self.ledger.bind_metrics(self.metrics)
+            self._fair: Optional[DeficitRoundRobin] = DeficitRoundRobin(
+                fairness, metrics=self.metrics
+            )
+        else:
+            self.ledger = None
+            self._fair = None
 
         self._rng = random.Random(seed)
         self._records: Dict[str, EndpointRecord] = {}
@@ -210,7 +264,9 @@ class Forwarder:
         self._watchdog.start()
         self._pump_event = threading.Event()
         self._pump: Optional[threading.Thread] = None
-        if self.max_delay_s > 0:
+        # The pump also owns the fair drain, so fairness needs it even with
+        # synchronous (max_delay_s == 0) delivery.
+        if self.max_delay_s > 0 or self._fair is not None:
             self._pump = threading.Thread(
                 target=self._pump_loop, name="forwarder/pump", daemon=True
             )
@@ -223,7 +279,10 @@ class Forwarder:
                 endpoint=endpoint,
                 pending=BatchCoalescer(self.max_batch, self.max_delay_s),
                 metrics=self.metrics,
+                shard=self.shard_label,
             )
+        if self._fair is not None:
+            self._pump_event.set()  # queued tenants may now have capacity
         return endpoint.endpoint_id
 
     def deregister(self, endpoint_id: str) -> None:
@@ -444,7 +503,65 @@ class Forwarder:
 
         With ``max_delay_s > 0`` the routed pairs land in per-endpoint submit
         queues and the pump delivers them (flush-on-size happens inline);
-        otherwise delivery is synchronous."""
+        otherwise delivery is synchronous.
+
+        With a fairness policy attached, each pair first passes quota
+        admission (futures beyond the tenant's quota fail fast with
+        :class:`~repro.core.fairness.AdmissionError` carrying ``retry_after``)
+        and admitted pairs land in per-tenant queues for the pump's
+        deficit-round-robin drain — routing is deferred, so every admitted
+        pair's chosen id reports as None."""
+        pairs = list(pairs)
+        if not pairs:
+            return []
+        if self._fair is None:
+            return self._route_many(pairs, endpoint_id)
+        admitted = 0
+        for env, future in pairs:
+            tenant = getattr(env, "tenant", None) or ANONYMOUS
+            quota = self.fairness.quota_of(tenant)
+            if not self.ledger.try_admit(tenant, quota):
+                self.metrics.counter("fair.rejected", {"tenant": tenant}).inc()
+                future.set_exception(AdmissionError(
+                    tenant=tenant, quota=quota,
+                    outstanding=self.ledger.outstanding(tenant),
+                    retry_after=self._retry_after(tenant, quota),
+                ))
+                continue
+            # the quota slot frees when the task reaches ANY terminal state —
+            # completion, failover loss, cancellation — so the ledger can
+            # never leak a slot
+            future.add_done_callback(lambda f, t=tenant: self.ledger.release(t))
+            self._fair.enqueue(tenant, (env, future, endpoint_id))
+            admitted += 1
+        if admitted:
+            self.metrics.counter("fair.admitted").inc(admitted)
+            self._pump_event.set()
+        return [None] * len(pairs)
+
+    def _retry_after(self, tenant: str, quota: Optional[int]) -> float:
+        """Backpressure hint: observed mean endpoint service latency scaled by
+        how deep the tenant's own backlog already is relative to its quota."""
+        with self._lock:
+            ewmas = [
+                r.latency_ewma for r in self._records.values()
+                if r.latency_ewma is not None
+            ]
+        lat = sum(ewmas) / len(ewmas) if ewmas else self.fairness.base_retry_after_s
+        backlog = self._fair.pending(tenant)
+        return max(
+            self.fairness.base_retry_after_s,
+            lat * (1.0 + backlog / max(1, quota or 1)),
+        )
+
+    def _route_many(
+        self,
+        pairs: Sequence[_Pair],
+        endpoint_id: Optional[str] = None,
+    ) -> List[Optional[str]]:
+        """The routing core (admission-free): policy choice, bookkeeping,
+        journaling, delivery. Fairness-mode pumps call this after the DRR
+        drain; without fairness `submit_many` is a straight pass-through."""
         pairs = list(pairs)
         if not pairs:
             return []
@@ -575,7 +692,51 @@ class Forwarder:
 
     def pump_once(self, force: bool = False) -> int:
         """Flush per-endpoint submit queues whose deadline has expired (all of
-        them when `force`). Returns the number of tasks delivered."""
+        them when `force`), after draining the fair-share tenant queues when
+        fairness is on. Returns the number of tasks delivered."""
+        delivered = self._pump_fair(force) if self._fair is not None else 0
+        return delivered + self._pump_queues(force)
+
+    def _pump_fair(self, force: bool = False) -> int:
+        """Drain the per-tenant queues deficit-round-robin into the router.
+
+        The drain budget is the fabric's spare capacity (Σ max(0, capacity −
+        outstanding) over live endpoints): tasks beyond it stay queued by
+        tenant, which is the fairness mechanism itself — a light tenant's
+        next task is drained ahead of a greedy tenant's backlog instead of
+        joining the back of a FIFO. With no live endpoints the budget is 0
+        and tenants simply wait. `force` (shutdown) ignores the budget."""
+        drained = 0
+        while True:
+            with self._lock:
+                budget = sum(
+                    max(0, r.endpoint.capacity() - len(r.outstanding))
+                    for r in self._live_records()
+                )
+            if force:
+                budget = max(budget, self._fair.pending())
+            if budget <= 0 or not self._fair.pending():
+                return drained
+            items = self._fair.drain(budget)
+            if not items:
+                return drained
+            by_pin: Dict[Optional[str], List[_Pair]] = {}
+            for env, future, pin in items:
+                by_pin.setdefault(pin, []).append((env, future))
+            for pin, routed in by_pin.items():
+                try:
+                    self._route_many(routed, endpoint_id=pin)
+                except (KeyError, RuntimeError) as exc:
+                    # unknown pin / every endpoint died since the budget
+                    # check: fail these futures (releasing their quota slots)
+                    # rather than dropping them silently
+                    for _, future in routed:
+                        future.set_exception(exc)
+            drained += len(items)
+            if not force:
+                return drained
+
+    def _pump_queues(self, force: bool = False) -> int:
         now = time.monotonic()
         flushes: List[Tuple[object, List[_Pair]]] = []
         with self._lock:
@@ -633,6 +794,11 @@ class Forwarder:
             value=None if exc is not None else future.result(0),
             error=exc,
         )
+        # Completion hot path: the global lock guards ONLY the map mutations
+        # (futures/eta/task→endpoint pops, outstanding decrement). Gauge sync,
+        # the EWMA fold, and predictor training run outside it — at scale
+        # completer threads must not serialize against routing holding this
+        # lock on the other side of the fabric.
         env: Optional[TaskEnvelope] = None
         with self._lock:
             self._futures.pop(task_id, None)
@@ -643,19 +809,16 @@ class Forwarder:
             rec = self._records.get(eid) if eid is not None else None
             if rec is not None and task_id in rec.outstanding:
                 env = rec.outstanding.pop(task_id)
-                rec.sync_outstanding()
                 if exc is None:
                     rec.completed += 1
-                    ts = future.timestamps
-                    if ts.result_ready and ts.endpoint_in:
-                        lat = max(0.0, ts.result_ready - ts.endpoint_in)
-                        if rec.latency_ewma is None:
-                            rec.latency_ewma = lat
-                        else:
-                            rec.latency_ewma = (
-                                self.ewma_alpha * lat
-                                + (1 - self.ewma_alpha) * rec.latency_ewma
-                            )
+        if rec is not None and env is not None:
+            rec.sync_outstanding()
+            if exc is None:
+                ts = future.timestamps
+                if ts.result_ready and ts.endpoint_in:
+                    rec.observe_latency(
+                        max(0.0, ts.result_ready - ts.endpoint_in), self.ewma_alpha
+                    )
         if self.predictor is None or eid is None or env is None:
             return
         ts = future.timestamps
@@ -725,20 +888,9 @@ class Forwarder:
             if not live:
                 return False
             self._backed.add(env.task_id)
-            dup = TaskEnvelope(
-                task_id=f"{env.task_id}#eta",
-                function_id=env.function_id,
-                payload=env.payload,
-                container=env.container,
-                requirements=env.requirements,
-                memoize=env.memoize,
-                max_retries=0,
-                speculative_of=env.task_id,
-                timestamps=env.timestamps,
-                data_refs=env.data_refs,
-                spill_store=env.spill_store,
-                spill_threshold=env.spill_threshold,
-            )
+            # aliases the primary's packed payload bytes — a backup copy
+            # must never duplicate the payload it re-sends
+            dup = env.clone_speculative("#eta")
             rec = min(
                 live,
                 key=lambda r: (
@@ -916,6 +1068,9 @@ class Forwarder:
         with self._lock:
             return {
                 "policy": self.policy,
+                "shard": self.shard_label,
+                "fairness": self._fair is not None,
+                "fair_pending": self._fair.pending() if self._fair is not None else 0,
                 "failovers": self.failovers,
                 "orphaned": self.orphaned,
                 "speculation": self.speculation,
@@ -945,3 +1100,260 @@ class Forwarder:
                     for eid, rec in self._records.items()
                 },
             }
+
+
+# -- sharded front ------------------------------------------------------------
+def shard_of(task_id: str, n_shards: int) -> int:
+    """Stable task→shard partition (crc32: deterministic across processes, so
+    a resumed fabric reassigns every journaled task to the same shard)."""
+    return zlib.crc32(task_id.encode()) % n_shards
+
+
+class _ShardedResults:
+    """ResultStore facade over a ShardedForwarder: each task's exactly-once
+    record lives in its owning shard's store; `prime`/`__contains__` route by
+    the same hash the submit path uses, so journal resume primes every
+    shard's ResultStore with exactly its own tasks."""
+
+    def __init__(self, owner: "ShardedForwarder"):
+        self._owner = owner
+
+    def _store(self, task_id: str) -> ResultStore:
+        return self._owner.shard_for(task_id).results
+
+    def prime(self, task_id: str) -> bool:
+        return self._store(task_id).prime(task_id)
+
+    def record(self, task_id: str, value: Any = None, error: Any = None) -> bool:
+        return self._store(task_id).record(task_id, value=value, error=error)
+
+    def get(self, task_id: str):
+        return self._store(task_id).get(task_id)
+
+    def __contains__(self, task_id: str) -> bool:
+        return task_id in self._store(task_id)
+
+    def __len__(self) -> int:
+        return sum(len(f.results) for f in self._owner.shards)
+
+
+class ShardedForwarder:
+    """N independent :class:`Forwarder` shards behind one Forwarder-shaped
+    front (the federated follow-ups' multi-forwarder deployment).
+
+    ``task_id → shard`` is a stable hash partition: every per-task structure
+    (future map, outstanding entry, ETA record, result slot) lives in exactly
+    one shard, so shards share no per-task state and each keeps its own lock,
+    submit queues, pump thread, and watchdog — completions on shard A never
+    contend with routing on shard B, which is what lifts the single global
+    RLock's throughput ceiling. Endpoints register with every shard; each
+    shard learns its own latency/outstanding view of them (gauge series are
+    disambiguated with a ``shard`` label).
+
+    The single :class:`Forwarder` is the degenerate one-shard case: the
+    surface consumed by :class:`~repro.core.service.FunctionService`
+    (register/submit_many/results/journal/resume/shard/stats/shutdown) is
+    mirrored here, so services, journal resume, and speculation work
+    unchanged against either. With a fairness policy, all shards share one
+    :class:`~repro.core.fairness.TenantLedger` so quotas cap a tenant's
+    fabric-wide outstanding count, not per-shard.
+    """
+
+    def __init__(
+        self,
+        n_shards: int = 4,
+        policy: str = "least_outstanding",
+        metrics: Optional[MetricsRegistry] = None,
+        journal: Optional[Journal] = None,
+        fairness: Optional[FairnessPolicy] = None,
+        **forwarder_kwargs,
+    ):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.fairness = fairness
+        ledger = TenantLedger(metrics=self.metrics) if fairness is not None else None
+        self.ledger = ledger
+        self.shards: List[Forwarder] = [
+            Forwarder(
+                policy=policy,
+                metrics=self.metrics,
+                journal=journal,
+                fairness=fairness,
+                tenant_ledger=ledger,
+                shard=str(i),
+                **forwarder_kwargs,
+            )
+            for i in range(n_shards)
+        ]
+        self.results = _ShardedResults(self)
+
+    # -- partition -----------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_index(self, task_id: str) -> int:
+        return shard_of(task_id, len(self.shards))
+
+    def shard_for(self, task_id: str) -> Forwarder:
+        return self.shards[self.shard_index(task_id)]
+
+    # -- Forwarder-shaped surface ---------------------------------------------
+    @property
+    def policy(self) -> str:
+        return self.shards[0].policy
+
+    @property
+    def speculation(self) -> bool:
+        return self.shards[0].speculation
+
+    @property
+    def journal(self) -> Optional[Journal]:
+        return self.shards[0].journal
+
+    @journal.setter
+    def journal(self, journal: Optional[Journal]) -> None:
+        for fwd in self.shards:
+            fwd.journal = journal
+
+    @property
+    def liveness_threshold_s(self) -> float:
+        return self.shards[0].liveness_threshold_s
+
+    @liveness_threshold_s.setter
+    def liveness_threshold_s(self, v: float) -> None:
+        for fwd in self.shards:
+            fwd.liveness_threshold_s = v
+
+    @property
+    def watchdog_interval_s(self) -> float:
+        return self.shards[0].watchdog_interval_s
+
+    @watchdog_interval_s.setter
+    def watchdog_interval_s(self, v: float) -> None:
+        for fwd in self.shards:
+            fwd.watchdog_interval_s = v
+
+    @property
+    def failovers(self) -> int:
+        return sum(f.failovers for f in self.shards)
+
+    @property
+    def orphaned(self) -> int:
+        return sum(f.orphaned for f in self.shards)
+
+    @property
+    def backups_launched(self) -> int:
+        return sum(f.backups_launched for f in self.shards)
+
+    def register(self, endpoint) -> str:
+        for fwd in self.shards:
+            fwd.register(endpoint)
+        return endpoint.endpoint_id
+
+    def deregister(self, endpoint_id: str) -> None:
+        for fwd in self.shards:
+            fwd.deregister(endpoint_id)
+
+    def rebind_metrics(self, metrics: MetricsRegistry) -> None:
+        self.metrics = metrics
+        if self.ledger is not None:
+            self.ledger.bind_metrics(metrics)
+        for fwd in self.shards:
+            fwd.rebind_metrics(metrics)
+
+    def endpoint_ids(self) -> List[str]:
+        return self.shards[0].endpoint_ids()
+
+    def endpoints(self) -> Dict[str, object]:
+        return self.shards[0].endpoints()
+
+    def live_count(self) -> int:
+        return self.shards[0].live_count()
+
+    def choose(self, env: TaskEnvelope):
+        return self.shard_for(env.task_id).choose(env)
+
+    def submit(
+        self,
+        env: TaskEnvelope,
+        future: TaskFuture,
+        endpoint_id: Optional[str] = None,
+    ) -> Optional[str]:
+        return self.shard_for(env.task_id).submit(env, future, endpoint_id=endpoint_id)
+
+    def submit_many(
+        self,
+        pairs: Sequence[_Pair],
+        endpoint_id: Optional[str] = None,
+    ) -> List[Optional[str]]:
+        """Partition the batch by task-id hash and submit each sub-batch to
+        its owning shard, stitching per-pair results back into input order."""
+        pairs = list(pairs)
+        if not pairs:
+            return []
+        n = len(self.shards)
+        by_shard: Dict[int, List[int]] = {}
+        for i, (env, _) in enumerate(pairs):
+            by_shard.setdefault(shard_of(env.task_id, n), []).append(i)
+        chosen: List[Optional[str]] = [None] * len(pairs)
+        for idx, indices in by_shard.items():
+            self.metrics.counter(
+                "forwarder.shard_tasks", {"shard": str(idx)}
+            ).inc(len(indices))
+            sub = self.shards[idx].submit_many(
+                [pairs[i] for i in indices], endpoint_id=endpoint_id
+            )
+            for i, eid in zip(indices, sub):
+                chosen[i] = eid
+        return chosen
+
+    def shard(self, n: int, requirements=()) -> List[Tuple[str, int]]:
+        """Capacity-proportional fan-out split (endpoint view is identical
+        across shards, so shard 0 answers for all)."""
+        return self.shards[0].shard(n, requirements=requirements)
+
+    def pump_once(self, force: bool = False) -> int:
+        return sum(fwd.pump_once(force=force) for fwd in self.shards)
+
+    def check_endpoints(self) -> List[str]:
+        dead: List[str] = []
+        for fwd in self.shards:
+            for eid in fwd.check_endpoints():
+                if eid not in dead:
+                    dead.append(eid)
+        return dead
+
+    def check_speculation(self) -> int:
+        return sum(fwd.check_speculation() for fwd in self.shards)
+
+    def shutdown(self) -> None:
+        for fwd in self.shards:
+            fwd.shutdown()
+
+    def stats(self) -> dict:
+        per_shard = [fwd.stats() for fwd in self.shards]
+        endpoints: Dict[str, dict] = {}
+        for s in per_shard:
+            for eid, ep in s["endpoints"].items():
+                agg = endpoints.setdefault(eid, {
+                    "routed": 0, "completed": 0, "outstanding": 0,
+                    "pending": 0, "dead": ep["dead"], "capacity": ep["capacity"],
+                })
+                for k in ("routed", "completed", "outstanding", "pending"):
+                    agg[k] += ep[k]
+                agg["dead"] = agg["dead"] and ep["dead"]
+        return {
+            "policy": self.policy,
+            "n_shards": len(self.shards),
+            "fairness": self.fairness is not None,
+            "failovers": self.failovers,
+            "orphaned": self.orphaned,
+            "speculation": self.speculation,
+            "backups_launched": self.backups_launched,
+            "batches_delivered": sum(s["batches_delivered"] for s in per_shard),
+            "tasks_delivered": sum(s["tasks_delivered"] for s in per_shard),
+            "endpoints": endpoints,
+            "shards": per_shard,
+        }

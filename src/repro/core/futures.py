@@ -105,9 +105,20 @@ class TaskEnvelope:
     # whose own dispatch re-warms them).
     data_cache: Any = None
     data_decoded: Any = None
+    # Identity that submitted this task (from TokenAuthority.verify); drives
+    # per-tenant quotas and fair-share dequeue in the Forwarder. None when no
+    # auth is configured (treated as the shared "anonymous" tenant).
+    tenant: Optional[str] = None
 
-    def clone_for_retry(self) -> "TaskEnvelope":
-        env = TaskEnvelope(
+    def _clone(self, **overrides) -> "TaskEnvelope":
+        """Base for retry/speculation clones. The packed payload is immutable
+        wire bytes, so clones alias it (`clone.payload is self.payload`) —
+        duplicating a task must never duplicate its payload. Timestamps are
+        shared too: the trail describes the one logical task. Runtime-only
+        handles (`data_cache`/`data_decoded`, `executor_id`, `batch_id`) are
+        dropped: the clone travels the fabric as a fresh attempt.
+        """
+        fields = dict(
             task_id=self.task_id,
             function_id=self.function_id,
             payload=self.payload,
@@ -115,14 +126,30 @@ class TaskEnvelope:
             requirements=self.requirements,
             memoize=self.memoize,
             max_retries=self.max_retries,
-            retries=self.retries + 1,
+            retries=self.retries,
             timestamps=self.timestamps,
             affinity_hint=self.affinity_hint,
             data_refs=self.data_refs,
             spill_store=self.spill_store,
             spill_threshold=self.spill_threshold,
+            tenant=self.tenant,
         )
-        return env
+        fields.update(overrides)
+        return TaskEnvelope(**fields)
+
+    def clone_for_retry(self) -> "TaskEnvelope":
+        return self._clone(retries=self.retries + 1)
+
+    def clone_speculative(self, suffix: str) -> "TaskEnvelope":
+        """Straggler-duplicate of this task: same shared payload bytes and
+        timestamp trail, id-suffixed so result dedup maps it back to the
+        canonical task (`speculative_of`). Never retried on its own — the
+        canonical attempt owns the retry budget."""
+        return self._clone(
+            task_id=f"{self.task_id}{suffix}",
+            speculative_of=self.task_id,
+            max_retries=0,
+        )
 
 
 class TaskFuture:

@@ -64,21 +64,29 @@ def _default(obj: Any):
     raise TypeError(f"cannot serialize {type(obj)!r}")
 
 
-def _ext_hook(code: int, data: bytes):
+def _ext_hook(code: int, data: bytes, writable: bool = True):
     if code == _EXT_NDARRAY:
         unpacker = msgpack.Unpacker(use_list=True, raw=False)
         unpacker.feed(data)
         dtype_str, shape = unpacker.unpack()
         offset = unpacker.tell()
+        arr = np.frombuffer(data, dtype=np.dtype(dtype_str), offset=offset)
+        arr = arr.reshape(shape)
+        if not writable:
+            # zero-copy fast path: a read-only view straight over the wire
+            # bytes. Callers that never hand the array to user code (decoded
+            # object caches, ref scans, unpack-to-repack hops) skip the copy
+            # entirely — at million-task scale the unpack copy dominated the
+            # decode hot path.
+            return arr
         # copy out of the wire bytes: a frombuffer view would be read-only,
         # and functions mutate their inputs freely (one copy, not a
         # slice-then-bytearray double copy)
-        arr = np.frombuffer(data, dtype=np.dtype(dtype_str), offset=offset)
-        return arr.reshape(shape).copy()
+        return arr.copy()
     if code == _EXT_TUPLE:
-        return tuple(unpackb(data))
+        return tuple(unpackb(data, writable=writable))
     if code == _EXT_SET:
-        return set(unpackb(data))
+        return set(unpackb(data, writable=writable))
     if code == _EXT_COMPLEX:
         re, im = unpackb(data)
         return complex(re, im)
@@ -103,8 +111,26 @@ def packb(obj: Any) -> bytes:
     return msgpack.packb(_canonicalize(obj), default=_default, use_bin_type=True)
 
 
-def unpackb(data: bytes) -> Any:
-    return msgpack.unpackb(data, ext_hook=_ext_hook, raw=False, strict_map_key=False)
+def unpackb(data: bytes, writable: bool = True) -> Any:
+    """Decode wire bytes back to a pytree.
+
+    ``writable=True`` (the default API) copies array leaves out of the wire
+    buffer so callers can mutate them. ``writable=False`` is the zero-copy
+    fast path: array leaves are read-only ``frombuffer`` views over ``data``
+    — use it only where the decoded value is never handed to user code (the
+    endpoint decoded-value cache hands out fresh copies per task; journal
+    replay only scans for refs).
+    """
+    if writable:
+        return msgpack.unpackb(
+            data, ext_hook=_ext_hook, raw=False, strict_map_key=False
+        )
+    return msgpack.unpackb(
+        data,
+        ext_hook=lambda code, payload: _ext_hook(code, payload, writable=False),
+        raw=False,
+        strict_map_key=False,
+    )
 
 
 def _hash_view(obj: Any) -> Any:

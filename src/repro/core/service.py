@@ -38,7 +38,8 @@ from .datastore import (
     spill_payload,
 )
 from .endpoint import Endpoint
-from .forwarder import Forwarder
+from .fairness import FairnessPolicy
+from .forwarder import Forwarder, ShardedForwarder
 from .futures import TaskEnvelope, TaskFuture, TaskState, new_task_id
 from .journal import Journal, ResumeReport
 from .memoization import MemoCache
@@ -115,10 +116,16 @@ class FunctionService:
         journal_dir: Optional[str] = None,
         datastore: Optional[ObjectStore] = None,
         spill_threshold: int = DEFAULT_SPILL_THRESHOLD,
+        n_shards: int = 1,
+        fairness: Optional[FairnessPolicy] = None,
     ):
         self.registry = FunctionRegistry()
         self.memo = MemoCache(max_entries=memo_entries)
         self.authority = authority
+        # Fairness quotas/weights declared on the authority's tenant profiles
+        # apply fabric-wide (explicit policy entries still win).
+        if fairness is not None and authority is not None:
+            fairness.bind_profiles(authority)
         # One MetricsRegistry per fabric: the forwarder and every registered
         # endpoint (and its executors/warm pools) bind to it, so
         # ``self.metrics.snapshot()`` is the whole-fabric telemetry surface.
@@ -129,9 +136,22 @@ class FunctionService:
             # endpoint registered before adoption binds to the fabric
             # registry — telemetry must never split across registries
             forwarder.rebind_metrics(self.metrics)
+            # a pre-built fair forwarder still learns the authority's profiles
+            if authority is not None and getattr(forwarder, "fairness", None) is not None:
+                forwarder.fairness.bind_profiles(authority)
         else:
             self.metrics = metrics if metrics is not None else MetricsRegistry()
-            self.forwarder = Forwarder(policy=policy, metrics=self.metrics)
+            if n_shards > 1:
+                # million-task scale: hash-partitioned forwarder shards, each
+                # with its own lock/pump/watchdog (see ShardedForwarder)
+                self.forwarder = ShardedForwarder(
+                    n_shards=n_shards, policy=policy, metrics=self.metrics,
+                    fairness=fairness,
+                )
+            else:
+                self.forwarder = Forwarder(
+                    policy=policy, metrics=self.metrics, fairness=fairness
+                )
         # Durability: with a journal attached, every task and workflow-run
         # lifecycle transition is written ahead, and resume() rehydrates
         # incomplete work after a restart (see docs/durability.md).
@@ -245,9 +265,13 @@ class FunctionService:
 
             inputs = [] if wire else _scan_futures(inv.payload)
             if inputs:
-                self._submit_deferred(inv, rf, future, inputs, memoizable, wire)
+                self._submit_deferred(
+                    inv, rf, future, inputs, memoizable, wire, identity
+                )
                 continue
-            env = self._build_envelope(inv, rf, future, inv.payload, memoizable, wire)
+            env = self._build_envelope(
+                inv, rf, future, inv.payload, memoizable, wire, identity
+            )
             if env is not None:  # None = served from the memo cache
                 groups.setdefault(inv.endpoint_id, []).append((env, future))
         for endpoint_id, pairs in groups.items():
@@ -271,6 +295,7 @@ class FunctionService:
         payload: Any,
         memoizable: bool,
         wire: bool,
+        identity: Optional[str] = None,
     ) -> Optional[TaskEnvelope]:
         """Memo-check `payload` and wrap it for the wire. Returns None when the
         memo cache completed the future without needing an endpoint."""
@@ -320,6 +345,7 @@ class FunctionService:
             spill_threshold=(
                 self.spill_threshold if self.datastore is not None else None
             ),
+            tenant=identity,
         )
         env.timestamps.client_submit = future.timestamps.client_submit
         env.timestamps.service_in = future.timestamps.service_in
@@ -348,6 +374,7 @@ class FunctionService:
         inputs: List[TaskFuture],
         memoizable: bool,
         wire: bool,
+        identity: Optional[str] = None,
     ) -> None:
         """Hold `inv` until every input future resolves, then substitute the
         results into the payload and submit. First input failure wins and
@@ -368,7 +395,9 @@ class FunctionService:
                 return
             try:
                 payload = _resolve_futures(inv.payload)
-                env = self._build_envelope(inv, rf, future, payload, memoizable, wire)
+                env = self._build_envelope(
+                    inv, rf, future, payload, memoizable, wire, identity
+                )
                 if env is not None:
                     self.forwarder.submit(env, future, endpoint_id=inv.endpoint_id)
             except BaseException as exc:  # noqa: BLE001 - must reach the future
@@ -590,7 +619,8 @@ class FunctionService:
             # ref-bearing bytes, and endpoints resolve from a ref's own
             # locations (fs:// stores re-attach by path after a restart)
             try:
-                refs = scan_refs(serializer.unpackb(entry.payload))
+                # scan-only decode: never handed to user code → zero-copy
+                refs = scan_refs(serializer.unpackb(entry.payload, writable=False))
             except Exception:
                 refs = []
             env.data_refs = tuple((r.key, r.size) for r in refs)

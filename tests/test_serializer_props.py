@@ -66,6 +66,62 @@ def test_nested_pytree_roundtrip():
     assert out["s"] == {3, 1, 2}
 
 
+# ------------------------------------------------------------ zero-copy fast path
+def test_readonly_unpack_skips_the_copy():
+    """unpackb(..., writable=False) returns read-only frombuffer views over
+    the wire bytes — no per-array copy — for callers that never hand the
+    value to user code (decoded caches, ref scans, unpack-to-repack hops)."""
+    arr = np.arange(8, dtype=np.float32).reshape(2, 4)
+    out = unpackb(packb(arr), writable=False)
+    assert not out.flags.writeable
+    assert not out.flags.owndata  # a view over the wire buffer, not a copy
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_readonly_unpack_propagates_through_nesting():
+    doc = {"a": [np.zeros(3)], "b": (np.ones((2, 2)),), "c": 5}
+    out = unpackb(packb(doc), writable=False)
+    assert not out["a"][0].flags.writeable
+    assert not out["b"][0].flags.writeable
+    assert out["c"] == 5
+
+
+def test_writable_default_is_unchanged():
+    """The default API still copies: both decodes see equal values, only the
+    flag differs."""
+    payload = {"x": np.arange(16, dtype=np.int64)}
+    wire = packb(payload)
+    rw, ro = unpackb(wire), unpackb(wire, writable=False)
+    np.testing.assert_array_equal(rw["x"], ro["x"])
+    assert rw["x"].flags.writeable
+    rw["x"][0] = -1  # must not raise — and must not leak into the ro view
+    assert ro["x"][0] == 0
+
+
+def test_fresh_copy_of_readonly_decode_is_writable():
+    """The endpoint decoded-value cache decodes read-only, then hands out
+    _fresh_copy per task — the hand-out must come back writable."""
+    from repro.core.datastore import _fresh_copy
+
+    ro = unpackb(packb({"x": np.arange(4)}), writable=False)
+    handout = _fresh_copy(ro)
+    assert handout["x"].flags.writeable
+    handout["x"][0] = 9
+    assert ro["x"][0] == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_readonly_and_writable_decodes_agree(data):
+    payload = data.draw(st.one_of(st.just(None), st.text(max_size=10)))
+    arr = build_array(data.draw(array_specs))
+    wire = packb({"p": payload, "a": arr})
+    rw, ro = unpackb(wire), unpackb(wire, writable=False)
+    assert rw["p"] == ro["p"]
+    np.testing.assert_array_equal(rw["a"], ro["a"])
+    assert rw["a"].flags.writeable and not ro["a"].flags.writeable
+
+
 # ------------------------------------------------------------ hypothesis props
 _DTYPES = (np.float32, np.float64, np.int32, np.int64, np.uint8, np.bool_)
 

@@ -1,0 +1,475 @@
+"""Sharded forwarder + multi-tenant fairness (million-task scale tier).
+
+Covers the scale push: task→shard hash partitioning, the ShardedForwarder's
+Forwarder-shaped surface (routing, failover, journal resume), per-tenant
+quota admission with retry_after, deficit-round-robin fair share, the
+narrowed _on_done lock (completions from many threads while submitting), and
+payload sharing on clone/speculation.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AdmissionError,
+    DeficitRoundRobin,
+    FairnessPolicy,
+    Forwarder,
+    FunctionService,
+    ShardedForwarder,
+    TaskEnvelope,
+    TaskFuture,
+    TenantLedger,
+    TokenAuthority,
+    shard_of,
+)
+from repro.core.auth import SCOPE_INVOKE
+
+
+class FakeEndpoint:
+    def __init__(self, eid, capacity=4, alive=True):
+        self.endpoint_id = eid
+        self._capacity = capacity
+        self._alive = alive
+        self.submitted = []
+
+    def is_alive(self, max_heartbeat_age_s=None):
+        return self._alive
+
+    def capacity(self):
+        return self._capacity
+
+    def has_warm(self, key):
+        return False
+
+    def submit(self, env, future):
+        self.submitted.append(env)
+
+    def shutdown(self):
+        pass
+
+
+def _env(i=0, fn="f", tenant=None):
+    return TaskEnvelope(task_id=f"t{i}", function_id=fn, payload=b"", tenant=tenant)
+
+
+def _pairs(n, tenant=None, prefix="t"):
+    out = []
+    for i in range(n):
+        env = TaskEnvelope(
+            task_id=f"{prefix}{i}", function_id="f", payload=b"", tenant=tenant
+        )
+        out.append((env, TaskFuture(env.task_id)))
+    return out
+
+
+@pytest.fixture()
+def sharded_factory():
+    created = []
+
+    def make(n_shards=3, endpoints=(), **kwargs):
+        kwargs.setdefault("watchdog_interval_s", 5.0)
+        sf = ShardedForwarder(n_shards=n_shards, **kwargs)
+        for ep in endpoints:
+            sf.register(ep)
+        created.append(sf)
+        return sf
+
+    yield make
+    for sf in created:
+        sf.shutdown()
+
+
+# ------------------------------------------------------------- partitioning
+def test_shard_assignment_is_stable():
+    ids = [f"task-{i}-deadbeef" for i in range(200)]
+    first = [shard_of(t, 8) for t in ids]
+    assert first == [shard_of(t, 8) for t in ids]  # same id → same shard
+    assert all(0 <= s < 8 for s in first)
+    assert len(set(first)) == 8  # 200 ids cover all 8 shards
+
+
+def test_sharded_forwarder_owns_each_task_in_exactly_one_shard(sharded_factory):
+    sf = sharded_factory(n_shards=4, endpoints=[FakeEndpoint("a", capacity=64)])
+    pairs = _pairs(64)
+    chosen = sf.submit_many(pairs)
+    assert chosen == ["a"] * 64
+    for env, _ in pairs:
+        owner = sf.shard_index(env.task_id)
+        for i, fwd in enumerate(sf.shards):
+            assert (env.task_id in fwd._futures) == (i == owner)
+    for _, fut in pairs:
+        fut.set_result(0)
+    stats = sf.stats()
+    assert stats["endpoints"]["a"]["routed"] == 64
+    assert stats["endpoints"]["a"]["outstanding"] == 0
+    assert sum(s["endpoints"]["a"]["completed"] for s in stats["shards"]) == 64
+
+
+def test_single_forwarder_is_the_degenerate_case(sharded_factory):
+    """One shard behaves exactly like a bare Forwarder for routing results."""
+    sf = sharded_factory(n_shards=1, endpoints=[FakeEndpoint("a"), FakeEndpoint("b")])
+    picks = sf.submit_many(_pairs(4))
+    assert sorted(picks) == ["a", "a", "b", "b"]  # least_outstanding spread
+
+
+def test_cross_shard_failover(sharded_factory):
+    a = FakeEndpoint("a", capacity=64)
+    b = FakeEndpoint("b", capacity=64)
+    sf = sharded_factory(n_shards=3, endpoints=[a, b])
+    pairs = _pairs(48)
+    sf.submit_many(pairs)
+    a._alive = False
+    dead = sf.check_endpoints()
+    assert dead == ["a"]
+    # every task routed to the dead endpoint — across EVERY shard — moved to b
+    for env, fut in pairs:
+        assert fut.endpoint_id == "b"
+        owner = sf.shard_for(env.task_id)
+        assert owner._task_endpoint[env.task_id] == "b"
+    assert sf.failovers > 0
+    shards_that_failed_over = [f for f in sf.shards if f.failovers > 0]
+    assert len(shards_that_failed_over) >= 2  # not a single-shard accident
+    for _, fut in pairs:
+        fut.set_result(0)
+    assert sf.stats()["endpoints"]["b"]["outstanding"] == 0
+
+
+def test_sharded_resume_primes_every_shards_result_store(tmp_path):
+    wal = str(tmp_path / "wal")
+    svc = FunctionService(journal_dir=wal, n_shards=3)
+    svc.make_endpoint("ep", n_executors=2)
+    fid = svc.register_function(lambda x: x + 1, name="inc3")
+    futs = [svc.run(fid, i) for i in range(30)]
+    done_ids = [f.task_id for f in futs]
+    assert [f.result(10) for f in futs] == [i + 1 for i in range(30)]
+    svc.journal.close()
+    svc.shutdown()
+
+    svc2 = FunctionService(n_shards=3)
+    svc2.make_endpoint("ep2", n_executors=2)
+    svc2.register_function(lambda x: x + 1, name="inc3")
+    report = svc2.resume(journal_dir=wal)
+    assert report.futures == {}  # everything was committed: nothing re-runs
+    sf = svc2.forwarder
+    assert isinstance(sf, ShardedForwarder)
+    for tid in done_ids:
+        owner = sf.shard_index(tid)
+        for i, fwd in enumerate(sf.shards):
+            assert (tid in fwd.results) == (i == owner)
+    # the 30 ids land in >1 shard, so priming genuinely fanned out
+    assert sum(1 for f in sf.shards if len(f.results)) >= 2
+    assert svc2.journal.state().duplicate_completions == 0
+    svc2.shutdown()
+
+
+# ---------------------------------------------------------------- fairness
+def test_drr_fair_share_math():
+    policy = FairnessPolicy(quantum=4, weights={"heavy": 3.0, "light": 1.0})
+    drr = DeficitRoundRobin(policy)
+    for i in range(300):
+        drr.enqueue("heavy", ("heavy", i))
+    for i in range(100):
+        drr.enqueue("light", ("light", i))
+    got = drr.drain(160)
+    assert len(got) == 160
+    heavy = sum(1 for t, _ in got if t == "heavy")
+    light = len(got) - heavy
+    # weight 3:1 → expect ~120:40; allow quantum-granularity slack
+    assert 2.0 <= heavy / light <= 4.0
+    assert drr.pending() == 400 - 160
+
+
+def test_drr_equal_weights_interleave():
+    drr = DeficitRoundRobin(FairnessPolicy(quantum=1))
+    for i in range(10):
+        drr.enqueue("a", ("a", i))
+        drr.enqueue("b", ("b", i))
+    got = drr.drain(10)
+    assert sum(1 for t, _ in got if t == "a") == 5
+    assert sum(1 for t, _ in got if t == "b") == 5
+
+
+def test_drr_light_tenant_jumps_greedy_backlog():
+    """A late-arriving light tenant drains ahead of a greedy backlog rather
+    than behind it (the anti-starvation property FIFO lacks)."""
+    drr = DeficitRoundRobin(FairnessPolicy(quantum=2))
+    for i in range(1000):
+        drr.enqueue("greedy", ("greedy", i))
+    drr.enqueue("light", ("light", 0))
+    got = drr.drain(8)
+    assert ("light", 0) in got
+
+
+def test_admission_rejects_beyond_quota_with_retry_after():
+    fwd = Forwarder(
+        fairness=FairnessPolicy(default_quota=4), watchdog_interval_s=5.0
+    )
+    try:
+        fwd.register(FakeEndpoint("a", capacity=100))
+        pairs = _pairs(10, tenant="alice")
+        fwd.submit_many(pairs)
+        rejected = [f for _, f in pairs if f.done()]
+        assert len(rejected) == 6  # 4 admitted, 6 over quota
+        for fut in rejected:
+            exc = fut.exception(0)
+            assert isinstance(exc, AdmissionError)
+            assert exc.tenant == "alice"
+            assert exc.quota == 4
+            assert exc.retry_after > 0
+        # completing the in-flight tasks frees quota slots
+        deadline = time.monotonic() + 2.0
+        while fwd.ledger.outstanding("alice") < 4:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        for env, fut in pairs:
+            if not fut.done():
+                fut.set_result(0)
+        deadline = time.monotonic() + 2.0
+        while fwd.ledger.outstanding("alice"):
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        again = _pairs(1, tenant="alice", prefix="again")
+        fwd.submit_many(again)
+        time.sleep(0.05)
+        assert not again[0][1].done()
+    finally:
+        fwd.shutdown()
+
+
+def test_quota_slot_freed_on_any_terminal_state():
+    fwd = Forwarder(
+        fairness=FairnessPolicy(default_quota=2), watchdog_interval_s=5.0
+    )
+    try:
+        fwd.register(FakeEndpoint("a", capacity=10))
+        pairs = _pairs(2, tenant="bob")
+        fwd.submit_many(pairs)
+        pairs[0][1].set_exception(RuntimeError("boom"))
+        pairs[1][1].cancel()
+        deadline = time.monotonic() + 2.0
+        while fwd.ledger.outstanding("bob"):
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+    finally:
+        fwd.shutdown()
+
+
+def test_fairness_quota_from_auth_tenant_profiles():
+    authority = TokenAuthority()
+    authority.set_tenant_profile("carol", quota=2, weight=5.0)
+    policy = FairnessPolicy(default_quota=100).bind_profiles(authority)
+    assert policy.quota_of("carol") == 2
+    assert policy.weight_of("carol") == 5.0
+    assert policy.quota_of("stranger") == 100
+    # explicit policy entries still win over profiles
+    policy.quotas["carol"] = 7
+    assert policy.quota_of("carol") == 7
+
+
+def test_service_stamps_tenant_and_enforces_profile_quota():
+    authority = TokenAuthority()
+    authority.set_tenant_profile("dave", quota=3)
+    svc = FunctionService(authority=authority, fairness=FairnessPolicy())
+    ep = FakeEndpoint("a", capacity=100)
+    ep_token = authority.issue("ops", scopes=(SCOPE_INVOKE, "register_endpoint"))
+    svc.register_endpoint(ep, token=ep_token)
+    token = authority.issue("dave", scopes=(SCOPE_INVOKE,))
+    fid = svc.register_function(
+        lambda x: x, name="idly", public=True,
+        token=authority.issue("owner", scopes=("register_function",)),
+    )
+    futs = [svc.run(fid, i, token=token) for i in range(5)]
+    time.sleep(0.1)
+    rejected = [f for f in futs if f.done() and isinstance(f.exception(0), AdmissionError)]
+    assert len(rejected) == 2
+    assert all(r.exception(0).tenant == "dave" for r in rejected)
+    # the admitted envelopes carried the verified identity
+    admitted = [env for env in ep.submitted]
+    assert admitted and all(env.tenant == "dave" for env in admitted)
+    svc.shutdown()
+
+
+def test_fair_drain_is_capacity_bounded():
+    """The pump drains only into spare endpoint capacity; the excess stays in
+    tenant queues instead of piling onto the endpoint."""
+    fwd = Forwarder(fairness=FairnessPolicy(), watchdog_interval_s=5.0)
+    try:
+        ep = FakeEndpoint("a", capacity=8)
+        fwd.register(ep)
+        pairs = _pairs(50, tenant="erin")
+        fwd.submit_many(pairs)
+        deadline = time.monotonic() + 2.0
+        while len(ep.submitted) < 8:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        time.sleep(0.05)
+        assert len(ep.submitted) == 8  # exactly the capacity, no more
+        assert fwd.stats()["fair_pending"] == 42
+        # completions free capacity → the pump keeps draining to done
+        for _ in range(20):
+            for env in list(ep.submitted):
+                fut = fwd._futures.get(env.task_id)
+                if fut is not None and not fut.done():
+                    fut.set_result(0)
+            if all(f.done() for _, f in pairs):
+                break
+            time.sleep(0.02)
+        assert all(f.done() for _, f in pairs)
+    finally:
+        fwd.shutdown()
+
+
+def test_greedy_tenant_cannot_lock_out_light_tenant():
+    """With a quota on the greedy tenant, a light tenant arriving behind a
+    large backlog still gets routed promptly (DRR + admission)."""
+    fwd = Forwarder(
+        fairness=FairnessPolicy(quotas={"greedy": 8}),
+        watchdog_interval_s=5.0,
+    )
+    try:
+        ep = FakeEndpoint("a", capacity=16)
+        fwd.register(ep)
+        greedy = _pairs(8, tenant="greedy", prefix="g")
+        fwd.submit_many(greedy)  # fills its quota; rest would be rejected
+        light = _pairs(2, tenant="light", prefix="l")
+        fwd.submit_many(light)
+        deadline = time.monotonic() + 2.0
+        while sum(1 for e in ep.submitted if e.tenant == "light") < 2:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        for _, f in greedy + light:
+            if not f.done():
+                f.set_result(0)
+    finally:
+        fwd.shutdown()
+
+
+def test_sharded_fairness_shares_one_ledger(sharded_factory):
+    sf = sharded_factory(
+        n_shards=4,
+        endpoints=[FakeEndpoint("a", capacity=100)],
+        fairness=FairnessPolicy(default_quota=10),
+    )
+    pairs = _pairs(25, tenant="frank")
+    sf.submit_many(pairs)
+    rejected = [f for _, f in pairs if f.done()]
+    # the quota caps fabric-wide outstanding across ALL shards, not 10/shard
+    assert len(rejected) == 15
+    assert all(isinstance(f.exception(0), AdmissionError) for f in rejected)
+    assert sf.ledger.outstanding("frank") == 10
+    for _, f in pairs:
+        if not f.done():
+            f.set_result(0)
+
+
+# ------------------------------------------- _on_done lock-scope regression
+def test_completions_from_many_threads_while_submitting():
+    """Narrowed _on_done lock: resolution runs outside the global lock, so
+    many completer threads racing many submitter threads neither deadlock
+    nor corrupt the routing maps."""
+    fwd = Forwarder(watchdog_interval_s=5.0)
+    try:
+        eps = [FakeEndpoint(f"e{i}", capacity=10_000) for i in range(4)]
+        for ep in eps:
+            fwd.register(ep)
+        n_threads, per_thread = 8, 200
+        all_futs = []
+        futs_lock = threading.Lock()
+        stop = threading.Event()
+
+        def submitter(k):
+            for j in range(per_thread):
+                env = TaskEnvelope(
+                    task_id=f"s{k}-{j}", function_id="f", payload=b""
+                )
+                fut = TaskFuture(env.task_id)
+                fwd.submit(env, fut)
+                with futs_lock:
+                    all_futs.append(fut)
+
+        def completer():
+            while not stop.is_set():
+                with futs_lock:
+                    pending = [f for f in all_futs if not f.done()]
+                for f in pending:
+                    f.set_result(0)
+                time.sleep(0.001)
+
+        submitters = [
+            threading.Thread(target=submitter, args=(k,)) for k in range(n_threads)
+        ]
+        completers = [threading.Thread(target=completer) for _ in range(4)]
+        for t in completers:
+            t.start()
+        for t in submitters:
+            t.start()
+        for t in submitters:
+            t.join(timeout=30)
+            assert not t.is_alive(), "submitter deadlocked"
+        deadline = time.monotonic() + 10
+        while True:
+            with futs_lock:
+                if len(all_futs) == n_threads * per_thread and all(
+                    f.done() for f in all_futs
+                ):
+                    break
+            assert time.monotonic() < deadline, "completions stalled"
+            time.sleep(0.01)
+        stop.set()
+        for t in completers:
+            t.join(timeout=5)
+        stats = fwd.stats()
+        assert sum(e["outstanding"] for e in stats["endpoints"].values()) == 0
+        assert sum(e["completed"] for e in stats["endpoints"].values()) == (
+            n_threads * per_thread
+        )
+        assert not fwd._futures and not fwd._task_endpoint
+    finally:
+        fwd.shutdown()
+
+
+# ------------------------------------------------- clone/speculation payload
+def test_clones_share_payload_bytes():
+    env = TaskEnvelope(
+        task_id="t", function_id="f", payload=b"x" * 4096, tenant="alice"
+    )
+    retry = env.clone_for_retry()
+    assert retry.payload is env.payload  # identity, not equality
+    assert retry.retries == env.retries + 1
+    assert retry.tenant == "alice"
+    backup = env.clone_speculative("#eta")
+    assert backup.payload is env.payload
+    assert backup.task_id == "t#eta"
+    assert backup.speculative_of == "t"
+    assert backup.max_retries == 0
+    assert backup.tenant == "alice"
+    assert backup.timestamps is env.timestamps  # one logical task, one trail
+
+
+def test_speculative_backup_aliases_payload_through_forwarder():
+    fwd = Forwarder(
+        policy="eta_aware", speculation=True, speculation_min_age_s=0.0,
+        speculation_eta_factor=0.0, watchdog_interval_s=5.0,
+    )
+    try:
+        a, b = FakeEndpoint("a", capacity=4), FakeEndpoint("b", capacity=4)
+        fwd.register(a)
+        fwd.register(b)
+        env = TaskEnvelope(task_id="slow", function_id="f", payload=b"p" * 1024)
+        fut = TaskFuture("slow")
+        fwd.submit(env, fut)
+        time.sleep(0.02)
+        assert fwd.check_speculation() == 1
+        dup = next(
+            e for ep in (a, b) for e in ep.submitted if e.task_id == "slow#eta"
+        )
+        assert dup.payload is env.payload
+        assert dup.speculative_of == "slow"
+        # first result wins, loser dedupes: unchanged speculation behavior
+        assert fut.set_result(1)
+        assert not fut.set_result(2)
+        assert fwd.results.get("slow") == (1, None)
+    finally:
+        fwd.shutdown()
