@@ -1,0 +1,188 @@
+"""Serving tier: fabric-served inference with KV-affinity routing and
+endpoint-level continuous batching (the DLHub/ML-inference case study of §7
+run *through* the fabric instead of beside it).
+
+One experiment, two configurations over the same journaled 2-endpoint
+fabric and the same reduced model:
+
+1. **batched** — ``serve_model(batching=True)``: concurrent decode tasks
+   arriving at an endpoint are merged by the ``DecodeCoalescer`` into one
+   batched kernel invocation against the shared stacked KV cache.
+2. **unbatched** — ``batching=False``: every decode task runs its own
+   batch-1 kernel (the per-request baseline a naive FaaS deployment gets).
+
+Both phases drive ``N_SESSIONS`` concurrent closed-loop users, each
+streaming ``N_NEW`` greedy tokens. Session-sticky routing keeps every
+decode step on the endpoint holding the session's cache slot, so
+``serving.affinity_hits`` must cover all decode steps and the journal fold
+must show zero duplicate terminal commitments. Full mode asserts the
+batched configuration reaches >=2x the unbatched aggregate tokens/s.
+
+Results land in ``benchmarks/results/serving.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import FunctionService
+from repro.core.containers import ContainerSpec
+from repro.models.model import Model
+from repro.serving.fabric import reset_serving, serve_model
+
+from .common import emit, percentile, scaled, smoke_mode
+
+N_SESSIONS = scaled(16, 4)   # concurrent users (acceptance floor: 16)
+N_NEW = scaled(24, 6)        # greedy tokens streamed per user
+PROMPT_LEN = 8               # fixed: one prefill compile per phase
+N_ENDPOINTS = 2
+
+
+def _phase(model, params, batching: bool, journal_dir: str) -> dict:
+    svc = FunctionService(journal_dir=journal_dir)
+    spec = ContainerSpec(
+        name="jit", capabilities={"cpu", "jit"},
+        min_workers=0, max_workers=N_SESSIONS,
+    )
+    eps = [
+        svc.make_endpoint(f"site{i}", n_executors=1, containers=[spec])
+        for i in range(N_ENDPOINTS)
+    ]
+    client = serve_model(
+        svc, model, params,
+        name="qwen-batched" if batching else "qwen-sequential",
+        max_len=PROMPT_LEN + N_NEW + 4,
+        max_sessions=N_SESSIONS + N_ENDPOINTS,
+        batching=batching,
+        window_s=0.010,
+    )
+    rng = np.random.default_rng(0)
+    # warm both endpoints (prefill + decode jit compiles) outside the clock
+    for ep in eps:
+        with client.session(
+            rng.integers(0, model.cfg.vocab, PROMPT_LEN),
+            endpoint_id=ep.endpoint_id,
+        ) as s:
+            for _ in s.stream(2):
+                pass
+
+    prompts = [
+        rng.integers(0, model.cfg.vocab, PROMPT_LEN) for _ in range(N_SESSIONS)
+    ]
+    ttfts: list = [None] * N_SESSIONS
+    counts = [0] * N_SESSIONS
+
+    def user(k: int) -> None:
+        s = client.session(prompts[k])
+        for _ in s.stream(N_NEW):
+            pass
+        ttfts[k] = s.ttft_s
+        counts[k] = len(s.tokens)
+        s.close()
+
+    threads = [threading.Thread(target=user, args=(k,)) for k in range(N_SESSIONS)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+
+    snap = svc.metrics.snapshot()
+    counters = snap["counters"]
+    merge_h = snap["histograms"].get("serving.merged_per_step")
+    mean_merge = (
+        round(merge_h["sum"] / merge_h["count"], 2)
+        if merge_h and merge_h["count"] else None
+    )
+    dup = svc.journal.state().duplicate_completions
+    out = {
+        "batching": batching,
+        "sessions": N_SESSIONS,
+        "tokens": int(sum(counts)),
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(sum(counts) / wall, 1),
+        "ttft_p99_s": round(percentile([t for t in ttfts if t], 99), 4),
+        "affinity_hits": counters.get("serving.affinity_hits", 0),
+        "cache_migrations": counters.get("serving.cache_migrations", 0),
+        "decode_batches": counters.get("serving.decode_batches", 0),
+        "mean_merge": mean_merge,
+        "duplicate_completions": dup,
+    }
+    svc.shutdown()
+    reset_serving()
+    assert out["affinity_hits"] > 0, "decode steps never hit a resident cache"
+    assert dup == 0, f"journal fold shows {dup} duplicate terminal commitments"
+    return out
+
+
+def run():
+    # Sized so one decode step (~40 ms) dwarfs the fabric round-trip
+    # (~1.4 ms): the compute-dominated regime real model serving lives in,
+    # where a wide batched step costs *less* wall time than a batch-1 step
+    # repeated (memory-bound weights, better core utilization). The
+    # repo-default reduced config decodes in 0.14 ms — there batching has
+    # nothing to amortize and the coalescer window would only add sync.
+    cfg = get_reduced("qwen1.5-0.5b").with_(
+        dtype="float32", d_model=768, n_layers=10, n_heads=12,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows = []
+
+    with tempfile.TemporaryDirectory(prefix="repro-serving-") as tmpdir:
+        seq = _phase(model, params, batching=False,
+                     journal_dir=os.path.join(tmpdir, "seq"))
+        bat = _phase(model, params, batching=True,
+                     journal_dir=os.path.join(tmpdir, "bat"))
+
+    speedup = bat["tokens_per_s"] / max(seq["tokens_per_s"], 1e-9)
+    rows.append(emit(
+        "serving/unbatched_token_us", 1e6 / max(seq["tokens_per_s"], 1e-9),
+        f"{seq['tokens_per_s']:.0f} tok/s, p99 TTFT {seq['ttft_p99_s'] * 1e3:.0f} ms "
+        f"({N_SESSIONS} sessions, batch-1 kernels)",
+    ))
+    rows.append(emit(
+        "serving/batched_token_us", 1e6 / max(bat["tokens_per_s"], 1e-9),
+        f"{bat['tokens_per_s']:.0f} tok/s, p99 TTFT {bat['ttft_p99_s'] * 1e3:.0f} ms, "
+        f"{speedup:.2f}x unbatched; mean merge {bat['mean_merge']}, "
+        f"{bat['affinity_hits']} affinity hits, "
+        f"{bat['duplicate_completions']} duplicate commitments",
+    ))
+    if not smoke_mode():
+        assert speedup >= 2.0, (
+            f"continuous batching must reach 2x the per-request baseline at "
+            f"{N_SESSIONS} sessions; measured {speedup:.2f}x"
+        )
+
+    out = os.path.join(os.path.dirname(__file__), "results", "serving.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(
+            {"smoke": smoke_mode(), "unbatched": seq, "batched": bat,
+             "speedup": round(speedup, 2)},
+            f, indent=1,
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny parameters for CI smoke runs")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        N_SESSIONS = scaled(16, 4)
+        N_NEW = scaled(24, 6)
+    print("name,us_per_call,derived")
+    run()

@@ -24,6 +24,7 @@ SUITES = (
     "chaos",          # durability tier: faults + full fabric restart, exactly-once
     "datafabric",     # data tier: DataRef vs inline, eta_aware routing, speculation
     "million",        # scale tier: sharded fair-mode forwarder + tenant fairness
+    "serving",        # serving tier: KV-affinity routing + continuous batching
     "memoization",    # Table 3
     "warming",        # Table 4 (container instantiation analogue)
     "batching",       # Fig. 8

@@ -5,7 +5,7 @@ Public API:
     TaskBatch, ResultBatch, BatchCoalescer, MetricsRegistry, Autoscaler,
     Journal, ResultStore, wait, get_result, DataRef, FileSystemStore,
     InMemoryStore, TaskPredictor, ShardedForwarder, FairnessPolicy,
-    AdmissionError, TenantLedger
+    AdmissionError, TenantLedger, SessionRouter
 """
 from .auth import (  # noqa: F401
     SCOPE_ADMIN,
@@ -83,6 +83,7 @@ from .forwarder import (  # noqa: F401
     ENDPOINT_POLICIES,
     EndpointRecord,
     Forwarder,
+    SessionRouter,
     ShardedForwarder,
     shard_of,
 )

@@ -29,7 +29,7 @@ from .metrics import MetricsRegistry
 from .provider import LocalThreadProvider, Provider, ProviderSpec
 from .registry import FunctionRegistry
 from .scheduler import Scheduler
-from .worker import TaskResult
+from .worker import SiteRuntime, TaskResult
 
 
 class Endpoint:
@@ -110,6 +110,12 @@ class Endpoint:
         # (see resolve_payload(decoded=...)). Plain dict — worker threads may
         # race to populate a key, which is harmless.
         self.data_decoded: Dict[str, Any] = {}
+        # Endpoint-scoped runtime state for site-aware functions (the serving
+        # tier's per-endpoint model hosts). The metrics thunk reads late so
+        # hosts see the service registry the endpoint rebinds to.
+        self.site = SiteRuntime(
+            self.endpoint_id, name, metrics_fn=lambda: self.metrics
+        )
 
         self.result_queue: "queue.Queue[TaskResult]" = queue.Queue()
         self._queue: deque[TaskEnvelope] = deque()
@@ -435,6 +441,7 @@ class Endpoint:
                 env.timestamps.dispatched = now
                 if env.timestamps.endpoint_in:
                     dispatch_latency.observe(now - env.timestamps.endpoint_in)
+                env.site = self.site  # where this attempt runs (site-aware fns)
                 ready.append(env)
             if not ready:
                 continue

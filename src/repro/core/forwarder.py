@@ -173,6 +173,51 @@ class EndpointRecord:
             self._ewma_gauge.set(lat if cur is None else alpha * lat + (1 - alpha) * cur)
 
 
+class SessionRouter:
+    """Sticky ``session_id → endpoint_id`` map for serving sessions.
+
+    Session affinity is *harder* than ``affinity_hint``: a bound session
+    follows its endpoint even when saturated (migrating would force a
+    KV-cache re-prefill, queueing is cheaper) and rebinds only when the
+    endpoint dies or deregisters — the serving tier then re-prefills on the
+    new endpoint (cache migration). One router is shared across every shard
+    of a :class:`ShardedForwarder` so a session's tasks agree on their home
+    regardless of which shard their task_ids hash to.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._map: Dict[str, str] = {}
+
+    def lookup(self, session_id: str) -> Optional[str]:
+        with self._lock:
+            return self._map.get(session_id)
+
+    def bind(self, session_id: str, endpoint_id: str) -> Optional[str]:
+        """Bind (or rebind) a session; returns the previous binding."""
+        with self._lock:
+            prev = self._map.get(session_id)
+            self._map[session_id] = endpoint_id
+            return prev
+
+    def forget(self, session_id: str) -> None:
+        with self._lock:
+            self._map.pop(session_id, None)
+
+    def evict_endpoint(self, endpoint_id: str) -> int:
+        """Drop every session bound to a dead/deregistered endpoint; their
+        next task rebinds under the routing policy."""
+        with self._lock:
+            stale = [s for s, e in self._map.items() if e == endpoint_id]
+            for s in stale:
+                del self._map[s]
+            return len(stale)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._map)
+
+
 class Forwarder:
     def __init__(
         self,
@@ -193,6 +238,7 @@ class Forwarder:
         fairness: Optional[FairnessPolicy] = None,
         tenant_ledger: Optional[TenantLedger] = None,
         shard: Optional[str] = None,
+        session_router: Optional[SessionRouter] = None,
     ):
         if policy not in ENDPOINT_POLICIES:
             raise ValueError(
@@ -248,6 +294,11 @@ class Forwarder:
             self.ledger = None
             self._fair = None
 
+        # Serving tier: session-sticky routing (may be shared across shards).
+        self.sessions = (
+            session_router if session_router is not None else SessionRouter()
+        )
+
         self._rng = random.Random(seed)
         self._records: Dict[str, EndpointRecord] = {}
         self._futures: Dict[str, TaskFuture] = {}
@@ -288,6 +339,7 @@ class Forwarder:
     def deregister(self, endpoint_id: str) -> None:
         with self._lock:
             self._records.pop(endpoint_id, None)
+        self.sessions.evict_endpoint(endpoint_id)
 
     def rebind_metrics(self, metrics: MetricsRegistry) -> None:
         """Adopt another registry: future forwarder-tier recordings land in
@@ -384,6 +436,17 @@ class Forwarder:
                 f"{advertised}"
             )
         live = capable
+        if env.session_id is not None:
+            # Session stickiness (serving tier): a bound session follows its
+            # endpoint even at capacity — its KV-cache slot lives there and a
+            # move means a re-prefill. Only death/deregistration (the binding
+            # was evicted, so lookup misses) falls through to the policy.
+            bound = self.sessions.lookup(env.session_id)
+            if bound is not None:
+                for r in live:
+                    if r.endpoint.endpoint_id == bound:
+                        self.metrics.counter("forwarder.session_hits").inc()
+                        return r
         if env.affinity_hint is not None:
             # Soft warm-affinity (workflow parent→child): prefer the hinted
             # endpoint while it is live with spare capacity; saturation or
@@ -395,6 +458,20 @@ class Forwarder:
                 ):
                     self.metrics.counter("forwarder.affinity_hits").inc()
                     return r
+        rec = self._policy_pick(live, env)
+        if env.session_id is not None:
+            # first task of a session (or its first after failover): bind it
+            # here so every subsequent decode step lands on this endpoint
+            prev = self.sessions.bind(env.session_id, rec.endpoint.endpoint_id)
+            if prev is not None and prev != rec.endpoint.endpoint_id:
+                self.metrics.counter("forwarder.session_moves").inc()
+        return rec
+
+    def _policy_pick(
+        self, live: List[EndpointRecord], env: TaskEnvelope
+    ) -> EndpointRecord:
+        """The configured policy's choice over capability-filtered live
+        records (no session/affinity shortcuts — callers handled those)."""
         if self.policy == "random":
             return self._rng.choice(live)
         if self.policy == "least_outstanding":
@@ -618,6 +695,11 @@ class Forwarder:
                         chosen.append(None)
                         continue
                     decisions += 1
+                elif env.session_id is not None:
+                    # a pinned task establishes session residency exactly like
+                    # a policy-routed one: the session's next unpinned step
+                    # must follow its KV cache to this endpoint
+                    self.sessions.bind(env.session_id, rec.endpoint.endpoint_id)
                 eid = rec.endpoint.endpoint_id
                 rec.outstanding[env.task_id] = env
                 rec.routed += 1
@@ -972,6 +1054,12 @@ class Forwarder:
                 if self._is_live(rec):
                     continue
                 rec.dead = True
+                evicted = self.sessions.evict_endpoint(rec.endpoint.endpoint_id)
+                if evicted:
+                    # sticky sessions lose their home with the endpoint; their
+                    # next decode step rebinds (and the serving tier
+                    # re-prefills the KV cache on the new endpoint)
+                    self.metrics.counter("forwarder.session_evictions").inc(evicted)
                 stranded = list(rec.outstanding.values())
                 rec.outstanding.clear()
                 rec.sync_outstanding()
@@ -1073,6 +1161,7 @@ class Forwarder:
                 "fair_pending": self._fair.pending() if self._fair is not None else 0,
                 "failovers": self.failovers,
                 "orphaned": self.orphaned,
+                "sessions": len(self.sessions),
                 "speculation": self.speculation,
                 "backups_launched": self.backups_launched,
                 "predictor": (
@@ -1174,6 +1263,9 @@ class ShardedForwarder:
         self.fairness = fairness
         ledger = TenantLedger(metrics=self.metrics) if fairness is not None else None
         self.ledger = ledger
+        # One session router across every shard: a session's decode steps
+        # hash to different shards by task_id, but must agree on their home.
+        self.sessions = SessionRouter()
         self.shards: List[Forwarder] = [
             Forwarder(
                 policy=policy,
@@ -1182,6 +1274,7 @@ class ShardedForwarder:
                 fairness=fairness,
                 tenant_ledger=ledger,
                 shard=str(i),
+                session_router=self.sessions,
                 **forwarder_kwargs,
             )
             for i in range(n_shards)
@@ -1350,6 +1443,7 @@ class ShardedForwarder:
             "fairness": self.fairness is not None,
             "failovers": self.failovers,
             "orphaned": self.orphaned,
+            "sessions": len(self.sessions),
             "speculation": self.speculation,
             "backups_launched": self.backups_launched,
             "batches_delivered": sum(s["batches_delivered"] for s in per_shard),

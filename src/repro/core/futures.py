@@ -91,6 +91,12 @@ class TaskEnvelope:
     # prefer the endpoint holding the parent's warm function). The Forwarder
     # honors it only while the hinted endpoint is live and has spare capacity.
     affinity_hint: Optional[str] = None
+    # Session-sticky routing (serving tier): tasks sharing a session_id pin
+    # to one endpoint for as long as it stays live — a decode step must land
+    # where the session's KV-cache slot lives, so stickiness survives
+    # saturation (unlike affinity_hint) and rebinds only on endpoint death,
+    # at which point the serving layer re-prefills (cache migration).
+    session_id: Optional[str] = None
     # Data fabric (see core/datastore.py): (key, size) of every DataRef the
     # payload carries — the Forwarder's transfer estimator reads sizes without
     # unpacking, and endpoints resolve refs at dispatch when this is
@@ -105,6 +111,10 @@ class TaskEnvelope:
     # whose own dispatch re-warms them).
     data_cache: Any = None
     data_decoded: Any = None
+    # Runtime-only handle to the dispatching endpoint's SiteRuntime (worker
+    # SiteRuntime): endpoint-scoped state for site-aware functions (serving
+    # hosts live there). Attached at dispatch, never cloned.
+    site: Any = None
     # Identity that submitted this task (from TokenAuthority.verify); drives
     # per-tenant quotas and fair-share dequeue in the Forwarder. None when no
     # auth is configured (treated as the shared "anonymous" tenant).
@@ -115,8 +125,9 @@ class TaskEnvelope:
         wire bytes, so clones alias it (`clone.payload is self.payload`) —
         duplicating a task must never duplicate its payload. Timestamps are
         shared too: the trail describes the one logical task. Runtime-only
-        handles (`data_cache`/`data_decoded`, `executor_id`, `batch_id`) are
-        dropped: the clone travels the fabric as a fresh attempt.
+        handles (`data_cache`/`data_decoded`/`site`, `executor_id`,
+        `batch_id`) are dropped: the clone travels the fabric as a fresh
+        attempt.
         """
         fields = dict(
             task_id=self.task_id,
@@ -129,6 +140,7 @@ class TaskEnvelope:
             retries=self.retries,
             timestamps=self.timestamps,
             affinity_hint=self.affinity_hint,
+            session_id=self.session_id,
             data_refs=self.data_refs,
             spill_store=self.spill_store,
             spill_threshold=self.spill_threshold,

@@ -69,6 +69,10 @@ class Invocation:
     memoize: bool = False
     max_retries: int = 2
     affinity_hint: Optional[str] = None
+    # Serving-session stickiness: tasks sharing a session_id route to one
+    # endpoint while it lives (the Forwarder's SessionRouter owns the
+    # binding); see docs/serving.md.
+    session_id: Optional[str] = None
     # Durability ownership: who re-drives this task after a fabric restart.
     # None = a standalone client task (``FunctionService.resume`` re-submits
     # it from the journal); a workflow run_id = the workflow engine owns it
@@ -338,6 +342,7 @@ class FunctionService:
             memoize=digest is not None,
             max_retries=inv.max_retries,
             affinity_hint=inv.affinity_hint,
+            session_id=inv.session_id,
             data_refs=tuple((r.key, r.size) for r in refs),
             spill_store=(
                 self.datastore.store_id if self.datastore is not None else None
@@ -416,6 +421,7 @@ class FunctionService:
         memoize: bool = False,
         max_retries: int = 2,
         token: Optional[Token] = None,
+        session_id: Optional[str] = None,
     ) -> List[TaskFuture]:
         """Homogeneous batch: one function, many payloads, submitted to the
         Forwarder as ONE batch (a single ``run()`` is simply a batch of one)."""
@@ -429,6 +435,7 @@ class FunctionService:
                     requirements=requirements,
                     memoize=memoize,
                     max_retries=max_retries,
+                    session_id=session_id,
                 )
                 for payload in payloads
             ],
@@ -447,6 +454,7 @@ class FunctionService:
         max_retries: int = 2,
         token: Optional[Token] = None,
         timeout: Optional[float] = None,
+        session_id: Optional[str] = None,
     ) -> Any:
         future = self._submit_tasks(
             function_id,
@@ -457,6 +465,7 @@ class FunctionService:
             memoize=memoize,
             max_retries=max_retries,
             token=token,
+            session_id=session_id,
         )[0]
         return future.result(timeout) if sync else future
 

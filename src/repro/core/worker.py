@@ -40,6 +40,61 @@ class TaskResult:
     batch_id: Optional[str] = None    # TaskBatch frame this task arrived in
 
 
+class SiteRuntime:
+    """Endpoint-scoped runtime state handed to *site-aware* functions.
+
+    A function registered with ``site_aware=True`` metadata receives
+    ``(payload, site)`` instead of ``(payload,)``: the dispatching endpoint
+    attaches its SiteRuntime to every envelope, so the function can reach
+    state that must live *where the task runs* — the serving tier's per-
+    endpoint model hosts (KV-cache slots) are the canonical tenant. State is
+    a keyed get-or-create map so concurrent workers build each service once.
+    """
+
+    def __init__(self, endpoint_id: str, name: str,
+                 metrics_fn: Optional[Callable[[], Any]] = None):
+        self.endpoint_id = endpoint_id
+        self.name = name
+        self._metrics_fn = metrics_fn
+        self._state: dict = {}
+        self._lock = threading.Lock()
+
+    @property
+    def metrics(self):
+        """The owning endpoint's *current* MetricsRegistry (endpoints rebind
+        to the service registry at registration, so this is read late)."""
+        return self._metrics_fn() if self._metrics_fn is not None else None
+
+    def get_or_create(self, key: Any, factory: Callable[[], Any]) -> Any:
+        with self._lock:
+            if key not in self._state:
+                self._state[key] = factory()
+            return self._state[key]
+
+    def pop(self, key: Any) -> Any:
+        with self._lock:
+            return self._state.pop(key, None)
+
+
+_default_site: Optional[SiteRuntime] = None
+_default_site_lock = threading.Lock()
+
+
+def default_site() -> SiteRuntime:
+    """Fallback SiteRuntime for tasks that bypassed endpoint dispatch
+    (direct executor submission in tests, in-process engine use)."""
+    global _default_site
+    with _default_site_lock:
+        if _default_site is None:
+            from .metrics import MetricsRegistry
+
+            registry = MetricsRegistry()
+            _default_site = SiteRuntime(
+                "local", "local", metrics_fn=lambda: registry
+            )
+        return _default_site
+
+
 def strip_traceback(exc: BaseException) -> BaseException:
     """Drop the traceback (frames + their locals) from `exc` and its
     cause/context chain. A TaskResult's exception outlives the task for as
@@ -175,7 +230,13 @@ class Worker(threading.Thread):
             executable, cold, dt = self.warm_pool.get_or_compile(
                 key, lambda: build_executable(rf, payload)
             )
-            value = executable(payload)
+            if rf.metadata.get("site_aware", False):
+                # endpoint-scoped functions see where they run: the serving
+                # tier resolves its per-endpoint model host through this
+                site = getattr(env, "site", None)
+                value = executable(payload, site or default_site())
+            else:
+                value = executable(payload)
             if getattr(env, "spill_store", None) and env.spill_threshold:
                 # result spill: oversized result leaves stay in the object
                 # store near where they were computed; only refs travel the

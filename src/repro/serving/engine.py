@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.metrics import MetricsRegistry
 from ..models.model import Model
 from . import kv_cache
 
@@ -45,12 +46,16 @@ class ServeEngine:
     one stacked cache; new requests prefill into free slots while existing
     ones keep decoding."""
 
-    def __init__(self, model: Model, params, max_batch: int = 4, max_len: int = 256):
+    def __init__(self, model: Model, params, max_batch: int = 4, max_len: int = 256,
+                 metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # serving telemetry goes through the fabric registry (docs/scaling.md
+        # "Serving tier"); the per-Request timestamps stay as raw material
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
@@ -97,6 +102,10 @@ class ServeEngine:
                 self.cache = self._insert(self.cache, seq_cache, slot)
                 req.tokens.append(first)
                 req.first_token_at = time.monotonic()
+                self.metrics.histogram("serving.ttft_s").observe(
+                    req.first_token_at - req.submitted
+                )
+                self.metrics.counter("serving.tokens_generated").inc()
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = len(req.prompt)
                 self._finish_if_done(slot)
@@ -129,6 +138,9 @@ class ServeEngine:
             self.slot_pos[s] += 1
             self._finish_if_done(s)
         self.steps += 1
+        self.metrics.counter("serving.tokens_generated").inc(len(active))
+        self.metrics.counter("serving.decode_batches").inc()
+        self.metrics.gauge("serving.batch_occupancy").set(len(active))
         return True
 
     def serve_forever(self, stop_event: threading.Event, idle_sleep_s: float = 0.002) -> None:

@@ -24,7 +24,7 @@ DOC_FILES = sorted(
 METRIC_PREFIXES = (
     "service.", "forwarder.", "endpoint.", "executor.", "warming.",
     "autoscaler.", "workflow.", "trigger.", "container.", "journal.",
-    "data.", "predictor.", "fair.",
+    "data.", "predictor.", "fair.", "serving.",
 )
 
 # [text](target) — excluding images; target split from any #anchor / title
